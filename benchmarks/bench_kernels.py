@@ -1,0 +1,58 @@
+"""Kernel-layer microbenchmark: jit'd pure-jnp oracle vs the chunked
+flash path at model shapes (the Pallas kernels themselves are validated in
+interpret mode — timing them on CPU would measure the interpreter)."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks
+from repro.models.layers import attention_core
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv_rows=None):
+    print("\n== kernel-layer microbench (CPU, jnp paths) ==")
+    key = jax.random.PRNGKey(0)
+    b, Kv, G, hd = 1, 2, 4, 64
+    for L in (512, 2048):
+        q = jax.random.normal(key, (b, L, Kv, G, hd))
+        k = jax.random.normal(key, (b, L, Kv, hd))
+        v = jax.random.normal(key, (b, L, Kv, hd))
+        pos = jnp.arange(L)
+        bf = masks.make_bias_fn(mode="block_causal", prompt_len=64,
+                                block_size=32)
+        bfv = lambda qp, kp, val: bf(qp, kp)
+        dense = jax.jit(lambda q, k, v: attention_core(
+            q, k, v, q_pos=pos, kv_pos=pos, bias_fn=bfv, scale=0.125,
+            impl="dense"))
+        chunk = jax.jit(lambda q, k, v: attention_core(
+            q, k, v, q_pos=pos, kv_pos=pos, bias_fn=bfv, scale=0.125,
+            impl="chunked", chunk=512))
+        td = _time(dense, q, k, v)
+        tc = _time(chunk, q, k, v)
+        print(f"  block-causal attn L={L:5d}: dense={td:9.0f}us "
+              f"chunked={tc:9.0f}us")
+        if csv_rows is not None:
+            csv_rows.append((f"kernels/attn_dense_L{L}", td, ""))
+            csv_rows.append((f"kernels/attn_chunked_L{L}", tc, ""))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,115 @@
+"""Shared benchmark assets: one tiny teacher + CDLM student trained once and
+cached under experiments/bench_assets/, reused by every table benchmark."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore, save
+from repro.configs.base import CDLMConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.data import Corpus, TaskSpec
+from repro.data.synthetic import score
+from repro.models import init_model
+from repro.training import trainer
+
+ASSETS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "bench_assets")
+
+CFG = get_config("qwen2-0.5b").reduced(
+    n_layers=2, d_model=128, d_ff=256, vocab_size=128, mask_token_id=127)
+TASK = TaskSpec("sort", vocab_size=128, prompt_len=10, gen_len=10,
+                sort_k=8, sort_range=24)
+CDLM_CFG = CDLMConfig(block_size=5, gen_length=10, prompt_length=10,
+                      temperatures=(0.0, 0.5))
+TEACHER_STEPS = 800
+STUDENT_STEPS = 350
+
+
+def corpus():
+    return Corpus(TASK, 1024, seed=0)
+
+
+def _path(name):
+    os.makedirs(ASSETS, exist_ok=True)
+    return os.path.join(ASSETS, name)
+
+
+def get_teacher(verbose=False):
+    template = init_model(jax.random.PRNGKey(0), CFG)
+    p = _path("teacher.npz")
+    if os.path.exists(p):
+        return restore(template, p)
+    tcfg = TrainConfig(learning_rate=2e-3, steps=TEACHER_STEPS,
+                       batch_size=64, remat=False)
+    teacher = trainer.train_teacher(CFG, corpus(), tcfg, verbose=verbose)
+    save(teacher, p)
+    return teacher
+
+
+def get_dataset(teacher, verbose=False):
+    p = _path("trajectories.npz")
+    keys = ["prompt", "gt", "final", "finalized_at", "hidden"]
+    if os.path.exists(p):
+        with np.load(p) as d:
+            return {k: jnp.asarray(d[k]) for k in keys}
+    ds = trainer.collect_dataset(teacher, CFG, CDLM_CFG, corpus(),
+                                 n_examples=256, batch=64, verbose=verbose)
+    np.savez(p, **{k: np.asarray(v) for k, v in ds.items()})
+    return ds
+
+
+def get_student(teacher=None, dataset=None, *, weights=None, steps=None,
+                cache_name="student.npz", verbose=False):
+    template = init_model(jax.random.PRNGKey(0), CFG)
+    p = _path(cache_name)
+    if os.path.exists(p):
+        return restore(template, p)
+    teacher = teacher if teacher is not None else get_teacher()
+    dataset = dataset if dataset is not None else get_dataset(teacher)
+    cdlm = CDLM_CFG
+    if weights is not None:
+        wd, wc, wm = weights
+        cdlm = dataclasses.replace(CDLM_CFG, w_distill=wd, w_cons=wc,
+                                   w_dlm=wm)
+    scfg = TrainConfig(learning_rate=5e-4, steps=steps or STUDENT_STEPS,
+                       batch_size=64, remat=False)
+    student = trainer.train_student(teacher, dataset, CFG, cdlm, scfg,
+                                    verbose=verbose)
+    save(student, p)
+    return student
+
+
+def eval_sampler(params, sampler_fn, *, n=64, conf_threshold=0.9,
+                 block_size=None, temperature=0.0, early_stop=False,
+                 **extra):
+    """Run a sampler over the eval split; return the Tables-1/2 columns."""
+    from repro.core.sampler import SamplerSpec
+    ev = corpus().eval_batch(n)
+    prompts = jnp.asarray(ev["prompt"])
+    spec = SamplerSpec(prompt_len=TASK.prompt_len, gen_len=TASK.gen_len,
+                       block_size=block_size or CDLM_CFG.block_size,
+                       conf_threshold=conf_threshold,
+                       temperature=temperature, early_stop=early_stop)
+    jfn = jax.jit(lambda p, x: sampler_fn(p, x, cfg=CFG, spec=spec, **extra))
+    res = jfn(params, prompts)
+    res.tokens.block_until_ready()           # warm
+    t0 = time.perf_counter()
+    res = jfn(params, prompts)
+    res.tokens.block_until_ready()
+    dt = time.perf_counter() - t0
+    s = score(ev["prompt"], np.asarray(res.tokens), TASK.prompt_len, TASK)
+    steps = float(res.steps.mean())
+    glen = float(res.gen_lengths.mean())
+    lat = dt / n
+    return {"score": s, "steps": steps, "gen_len": glen,
+            "latency_s": lat, "tps": glen / lat if lat else 0.0,
+            "calls": int(res.n_model_calls)}

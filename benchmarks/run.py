@@ -1,0 +1,47 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness driver — one module per paper table/figure:
+
+  bench_arithmetic_intensity  Fig. 4 + App. B.4  (analytic, exact on CPU)
+  bench_main_results          Tables 1-2         (toy-scale pipeline)
+  bench_step_truncation       Table 4
+  bench_conf_threshold        Table 7 / App. B.2
+  bench_block_size            Fig. 8 / App. B.3
+  bench_loss_weights          Table 3
+  bench_kernels               kernel-layer microbench
+
+Run everything:   PYTHONPATH=src python -m benchmarks.run
+One module:       PYTHONPATH=src python -m benchmarks.bench_main_results
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_arithmetic_intensity,
+        bench_block_size,
+        bench_conf_threshold,
+        bench_kernels,
+        bench_loss_weights,
+        bench_main_results,
+        bench_step_truncation,
+    )
+    rows = []
+    t0 = time.time()
+    for mod in (bench_arithmetic_intensity, bench_kernels,
+                bench_main_results, bench_step_truncation,
+                bench_conf_threshold, bench_block_size, bench_loss_weights):
+        print(f"\n##### {mod.__name__} ({time.time()-t0:.0f}s elapsed) #####")
+        mod.run(csv_rows=rows)
+
+    print("\n\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"\ntotal wall time: {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

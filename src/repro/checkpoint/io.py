@@ -1,0 +1,42 @@
+"""Shard-aware checkpointing without external deps.
+
+Params are flattened to path-keyed arrays in an ``.npz``. ``save`` gathers
+to host (fine at example scale; at production scale each host would write
+its own addressable shards — the path-keyed layout is already per-leaf so
+that extension is mechanical). ``restore`` needs a template tree (from
+``init_model`` or ``jax.eval_shape``) to rebuild structure and dtypes.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save(tree, path: str) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(template, path: str):
+    with np.load(path) as data:
+        flat = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat[0]:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+            arr = data[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(flat[1], leaves)

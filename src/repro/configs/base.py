@@ -1,0 +1,290 @@
+"""Configuration system for the CDLM framework.
+
+Everything is a frozen dataclass so configs hash/compare cleanly and can be
+used as static args under jit. ``ModelConfig`` describes an architecture;
+``CDLMConfig`` describes the paper's technique knobs; ``TrainConfig`` /
+``ServeConfig`` / ``MeshConfig`` describe the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Layer kinds used in the per-period layer program (see models/transformer.py)
+# ---------------------------------------------------------------------------
+ATTN = "attn"          # self attention (mode decided at call time)
+ATTN_LOCAL = "attn_local"  # sliding-window self attention (gemma2 local)
+MAMBA = "mamba"        # selective SSM block (jamba)
+RWKV = "rwkv"          # RWKV6 time-mix block
+
+MLP = "mlp"            # dense FFN
+MOE = "moe"            # mixture-of-experts FFN
+RWKV_CM = "rwkv_cm"    # RWKV6 channel-mix (token-shifted FFN)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. One instance per assigned architecture."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+
+    # Core dims
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+
+    # Attention flavor
+    qkv_bias: bool = False           # qwen-style QKV bias
+    rope_theta: float = 10_000.0
+    attn_logit_softcap: Optional[float] = None   # gemma2: 50.0
+    final_logit_softcap: Optional[float] = None  # gemma2: 30.0
+    sliding_window: Optional[int] = None         # window for ATTN_LOCAL layers
+    query_pre_attn_scalar: Optional[float] = None  # gemma2 scales by this not head_dim
+    # Optional sliding-window *decode* variant enabling long_500k for dense
+    # archs (DESIGN.md §6): caps the attended cache length at decode time.
+    long_context_window: Optional[int] = None
+
+    # FFN flavor
+    activation: str = "silu"         # silu (SwiGLU) | gelu (GeGLU)
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: Optional[int] = None   # expert hidden dim (defaults to d_ff)
+    n_shared_experts: int = 0        # kimi/deepseek-style shared expert
+    router_aux_weight: float = 0.01  # load-balance aux loss weight
+    capacity_factor: float = 1.25
+
+    # SSM (mamba, for jamba)
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # RWKV6
+    rwkv_head_size: int = 64
+
+    # Layer program: tuple of per-layer "slot" kinds with period
+    # ``len(layer_period)``; layer i uses layer_period[i % len(layer_period)].
+    # Each slot is (mixer_kind, ffn_kind).
+    layer_period: Tuple[Tuple[str, str], ...] = ((ATTN, MLP),)
+
+    # Positional encoding: rope | sinusoidal (whisper) | none (rwkv)
+    pos_embed: str = "rope"
+
+    # Norms / embeddings
+    norm_eps: float = 1e-6
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma scales embeddings by sqrt(d_model)
+
+    # Encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq_len: int = 0         # fixed encoder length (1500 audio frames)
+
+    # Modality frontend stubs (spec carve-out): number of prefix embedding
+    # positions supplied pre-computed by input_specs().
+    n_prefix_embeds: int = 0         # VLM patch embeddings prepended to text
+
+    # Diffusion
+    mask_token_id: int = 0           # set per-config (vocab_size - 1 usually)
+    eos_token_id: int = 1
+
+    # Numerics
+    dtype: str = "bfloat16"          # activation/param dtype for dry-run
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_experts and self.moe_d_ff is None:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0 or self.family in ("ssm",), (
+            f"{self.name}: n_heads={self.n_heads} not a multiple of n_kv_heads={self.n_kv_heads}")
+        assert self.n_layers % len(self.layer_period) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not a multiple of period "
+            f"{len(self.layer_period)}")
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.layer_period)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(mix in (MAMBA, RWKV) for mix, _ in self.layer_period)
+
+    @property
+    def supports_bidirectional(self) -> bool:
+        """Can this backbone act as a bidirectional DLM teacher?"""
+        return not any(mix in (MAMBA, RWKV) for mix, _ in self.layer_period)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + layers + head)."""
+        d, hd = self.d_model, self.head_dim
+        n_q, n_kv = self.n_heads, self.n_kv_heads
+        glu = 3  # gated FFNs use 3 matrices
+        total = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # head
+        per = {}
+        per[ATTN] = d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+        per[ATTN_LOCAL] = per[ATTN]
+        exp = self.mamba_expand * d
+        per[MAMBA] = (d * exp * 2 + exp * self.mamba_d_conv
+                      + exp * (self.mamba_d_state * 2 + 1)  # B,C,dt proj (approx)
+                      + exp * d)
+        per[RWKV] = 4 * d * d + d * d  # r,k,v,g,o projections (approx)
+        per[MLP] = glu * d * self.d_ff
+        per[RWKV_CM] = 2 * d * self.d_ff + d * d
+        if self.n_experts:
+            per[MOE] = ((self.n_experts + self.n_shared_experts)
+                        * glu * d * self.moe_d_ff + d * self.n_experts)
+        for mix, ffn in self.layer_period:
+            key = (mix, ffn)
+            per.setdefault(key, per[mix] + per[ffn] + 2 * d)
+        total += sum(per[(mix, ffn)] for mix, ffn in self.layer_period) * self.n_periods
+        if self.is_encoder_decoder:
+            # encoder layers + cross attention in decoder
+            total += self.n_encoder_layers * (per[ATTN] + per[MLP] + 2 * d)
+            total += self.n_layers * per[ATTN]  # cross-attn per decoder layer
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        full_moe = self.n_experts * 3 * d * self.moe_d_ff
+        active_moe = (self.experts_per_token + self.n_shared_experts) * 3 * d * self.moe_d_ff
+        n_moe_layers = sum(1 for _, f in self.layer_period if f == MOE) * self.n_periods
+        return int(self.param_count() - n_moe_layers * (full_moe - active_moe))
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Smoke-test variant: ≤2 periods, d_model≤256, ≤4 experts."""
+        period = self.layer_period
+        small = dict(
+            n_layers=len(period) * min(2, self.n_periods),
+            d_model=256 if self.d_model >= 256 else self.d_model,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=64,
+            d_ff=512,
+            vocab_size=512,
+            mask_token_id=511,
+            eos_token_id=1,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2) if self.n_experts else 0,
+            moe_d_ff=256 if self.n_experts else None,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            sliding_window=64 if self.sliding_window else None,
+            long_context_window=128 if self.long_context_window else None,
+            n_encoder_layers=2 if self.is_encoder_decoder else 0,
+            encoder_seq_len=16 if self.is_encoder_decoder else 0,
+            n_prefix_embeds=8 if self.n_prefix_embeds else 0,
+            query_pre_attn_scalar=(64.0 if self.query_pre_attn_scalar else None),
+            dtype="float32",
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclass(frozen=True)
+class CDLMConfig:
+    """The paper's technique knobs (§4, App. A)."""
+
+    block_size: int = 32             # B
+    gen_length: int = 256            # L_g
+    prompt_length: int = 512
+    # Loss weights (Table 5/6 defaults for Dream)
+    w_distill: float = 1.0
+    w_cons: float = 0.5
+    w_dlm: float = 0.01
+    # Inference
+    conf_threshold: float = 0.9      # τ_conf
+    early_stop: bool = True
+    # Trajectory collection (Alg. 1)
+    temperatures: Tuple[float, ...] = (0.0, 0.5)
+    # Distillation uses forward KL in logit space (App. A.2 findings)
+    kl_direction: str = "forward"
+
+    @property
+    def n_blocks(self) -> int:
+        return self.gen_length // self.block_size
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 2e-5
+    warmup_frac: float = 0.05
+    lr_schedule: str = "constant"   # constant | cosine
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    batch_size: int = 64
+    steps: int = 1000
+    seed: int = 0
+    use_lora: bool = False
+    lora_rank: int = 32
+    lora_alpha: float = 32.0
+    remat: bool = True               # checkpoint each layer period
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    block_size: int = 32
+    gen_length: int = 256
+    conf_threshold: float = 0.9
+    temperature: float = 0.0
+    sampler: str = "cdlm"            # vanilla|fast_dllm|dual_cache|interval_cache|cdlm|ar
+    cache_refresh_interval: int = 8  # for interval_cache (dLLM-Cache analog)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# TPU v5e hardware constants for the roofline (per chip).
+@dataclass(frozen=True)
+class HardwareConfig:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # bytes/s
+    ici_bw: float = 50e9             # bytes/s per link
+    hbm_bytes: float = 16e9
+
+    @property
+    def ridge_ai(self) -> float:
+        return self.peak_flops / self.hbm_bw
+
+
+A100 = HardwareConfig(name="a100-sxm4-80g", peak_flops=311.9e12,
+                      hbm_bw=2039e9, ici_bw=300e9, hbm_bytes=80e9)
+TPU_V5E = HardwareConfig()

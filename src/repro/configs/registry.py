@@ -1,0 +1,52 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+from repro.configs import (  # noqa: F401
+    dream_7b,
+    gemma2_27b,
+    gemma_7b,
+    internvl2_1b,
+    jamba_v01_52b,
+    kimi_k2_1t,
+    llada_8b,
+    llama4_maverick_400b,
+    qwen1_5_110b,
+    qwen2_0_5b,
+    rwkv6_1_6b,
+    whisper_base,
+)
+
+# The 10 assigned architectures (+ the paper's own two DLMs).
+ARCHITECTURES: Dict[str, ModelConfig] = {
+    "internvl2-1b": internvl2_1b.CONFIG,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b.CONFIG,
+    "qwen2-0.5b": qwen2_0_5b.CONFIG,
+    "rwkv6-1.6b": rwkv6_1_6b.CONFIG,
+    "gemma-7b": gemma_7b.CONFIG,
+    "jamba-v0.1-52b": jamba_v01_52b.CONFIG,
+    "gemma2-27b": gemma2_27b.CONFIG,
+    "kimi-k2-1t-a32b": kimi_k2_1t.CONFIG,
+    "qwen1.5-110b": qwen1_5_110b.CONFIG,
+    "whisper-base": whisper_base.CONFIG,
+}
+
+PAPER_ARCHITECTURES: Dict[str, ModelConfig] = {
+    "dream-7b": dream_7b.CONFIG,
+    "llada-8b": llada_8b.CONFIG,
+}
+
+ALL_ARCHITECTURES: Dict[str, ModelConfig] = {**ARCHITECTURES, **PAPER_ARCHITECTURES}
+
+ASSIGNED_IDS = tuple(ARCHITECTURES.keys())
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return ALL_ARCHITECTURES[arch]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {sorted(ALL_ARCHITECTURES)}") from None

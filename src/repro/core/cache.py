@@ -1,0 +1,80 @@
+"""Exact block-wise caches (KV + SSM/RWKV state) — paper §4.3.
+
+The cache mirrors the transformer's per-slot emission structure: a tuple
+over period slots of dicts whose leaves are stacked over periods:
+
+- attention slots:  ``{"k": (np, b, max_len, n_kv, hd), "v": ...}``
+- cross-attention (whisper): ``{"ck": (np, b, enc_len, n_kv, hd), "cv": ...}``
+- mamba slots:      ``{"conv": (np, b, d_conv-1, e), "ssm": (np, b, e, N)}``
+- rwkv slots:       ``{"S": (np, b, H, hs, hs), "tm_shift": (np, b, d),
+                       "cm_shift": (np, b, d)}``
+
+``commit`` writes a block's emissions at ``offset`` (KV) / replaces state
+(SSM) — called only at block completion, so caching stays *exact*: committed
+KV always derives from finalized token values (the "commit pass").
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, RWKV, RWKV_CM, ModelConfig
+from repro.models import mamba as M
+from repro.models import rwkv6 as R
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> tuple:
+    """Allocate empty cache buffers for every period slot."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    np_ = cfg.n_periods
+    slots = []
+    for mixer, ffn in cfg.layer_period:
+        slot: dict = {}
+        if mixer in (ATTN, ATTN_LOCAL):
+            kv_shape = (np_, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            slot["k"] = jnp.zeros(kv_shape, dt)
+            slot["v"] = jnp.zeros(kv_shape, dt)
+            if cfg.is_encoder_decoder:
+                cshape = (np_, batch, cfg.encoder_seq_len, cfg.n_kv_heads, cfg.head_dim)
+                slot["ck"] = jnp.zeros(cshape, dt)
+                slot["cv"] = jnp.zeros(cshape, dt)
+        elif mixer == MAMBA:
+            e = cfg.mamba_expand * cfg.d_model
+            slot["conv"] = jnp.zeros((np_, batch, cfg.mamba_d_conv - 1, e), dt)
+            slot["ssm"] = jnp.zeros((np_, batch, e, cfg.mamba_d_state), jnp.float32)
+        elif mixer == RWKV:
+            H, hs = R.n_rwkv_heads(cfg), cfg.rwkv_head_size
+            slot["S"] = jnp.zeros((np_, batch, H, hs, hs), jnp.float32)
+            slot["tm_shift"] = jnp.zeros((np_, batch, cfg.d_model), dt)
+        if ffn == RWKV_CM:
+            slot["cm_shift"] = jnp.zeros((np_, batch, cfg.d_model), dt)
+        slots.append(slot)
+    return tuple(slots)
+
+
+def commit(cache: tuple, emissions: tuple, offset) -> tuple:
+    """Write a block's emissions into the cache.
+
+    KV emissions ``(np, b, L_blk, kv, hd)`` are inserted at sequence position
+    ``offset``; state emissions (ssm/rwkv/conv/shift/cross) replace the old
+    state wholesale.
+    """
+    new_slots = []
+    for cslot, eslot in zip(cache, emissions):
+        ns = dict(cslot)
+        for key, val in eslot.items():
+            if key in ("k", "v"):
+                buf = cslot[key]
+                ns[key] = jax.lax.dynamic_update_slice(
+                    buf, val.astype(buf.dtype), (0, 0, offset, 0, 0))
+            elif key in cslot:
+                ns[key] = val.astype(cslot[key].dtype)
+        new_slots.append(ns)
+    return tuple(new_slots)
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(cache))

@@ -1,0 +1,94 @@
+"""Masked-diffusion process utilities (paper §3).
+
+The forward process masks tokens independently; the reverse-time transition
+``q_{s|t}`` (Eq. 2) preserves unmasked tokens, keeps a masked token masked
+w.p. ``s/t`` and unmasks it w.p. ``(t-s)/t`` according to the model's
+predictive distribution ``q_{0|t}``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_tokens(key, tokens, t, mask_id: int, maskable=None):
+    """Independently mask each token with probability ``t`` (Eq. 6 setup).
+
+    tokens: (..., L) int; t: scalar or (...,) broadcastable masking ratio.
+    maskable: optional bool (..., L) restricting which positions may be
+    masked (e.g. only the answer span)."""
+    u = jax.random.uniform(key, tokens.shape)
+    t = jnp.asarray(t)
+    while t.ndim < tokens.ndim:
+        t = t[..., None]
+    m = u < t
+    if maskable is not None:
+        m = m & maskable
+    return jnp.where(m, mask_id, tokens), m
+
+
+def transition_probs(t: float, s: float, is_masked: bool,
+                     p_unmask_token: jnp.ndarray) -> dict:
+    """Token-level q_{s|t} probabilities (Eq. 2), for tests/properties.
+
+    Returns {"keep": P(stay as-is), "still_masked": ..., "unmask": vector}.
+    """
+    assert 0 <= s < t <= 1
+    if not is_masked:
+        return {"keep": 1.0, "still_masked": 0.0,
+                "unmask": jnp.zeros_like(p_unmask_token)}
+    return {"keep": 0.0, "still_masked": s / t,
+            "unmask": (t - s) / t * p_unmask_token}
+
+
+def timestep(k: int, n_steps: int) -> float:
+    """t_k = 1 - k/N."""
+    return 1.0 - k / n_steps
+
+
+def confidence_and_candidates(logits, tokens, mask_id: int,
+                              temperature: float = 0.0,
+                              key=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-position candidate token + confidence from ``p_theta(x0|x_t)``.
+
+    Greedy (temperature 0): candidate = argmax, confidence = its prob.
+    Sampled: candidate ~ softmax(logits/T), confidence = prob of the sample
+    under the temperature-1 distribution (Alg. 1 line 11).
+    Unmasked positions get confidence -inf (never re-finalized).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if temperature <= 0.0 or key is None:
+        cand = jnp.argmax(logits, axis=-1)
+    else:
+        cand = jax.random.categorical(key, logits.astype(jnp.float32) / temperature)
+    conf = jnp.take_along_axis(probs, cand[..., None], axis=-1)[..., 0]
+    is_masked = tokens == mask_id
+    conf = jnp.where(is_masked, conf, -jnp.inf)
+    return cand, conf
+
+
+def select_topk_in_block(conf, block_mask, k: int = 1):
+    """Boolean selection of the top-k confident positions within the active
+    block (vanilla low-confidence-remasking unmasks top-1 per step)."""
+    masked_conf = jnp.where(block_mask, conf, -jnp.inf)
+    if k == 1:
+        idx = jnp.argmax(masked_conf, axis=-1)
+        sel = jax.nn.one_hot(idx, conf.shape[-1], dtype=bool)
+        # nothing to select if the whole block is already finalized
+        any_masked = jnp.any(jnp.isfinite(masked_conf), axis=-1, keepdims=True)
+        return sel & any_masked
+    top_vals, _ = jax.lax.top_k(masked_conf, k)
+    thresh = top_vals[..., -1:]
+    sel = (masked_conf >= thresh) & jnp.isfinite(masked_conf)
+    return sel
+
+
+def select_threshold_in_block(conf, block_mask, tau: float):
+    """Fast-dLLM / CDLM §4.3: every position with conf >= tau, but always at
+    least the single most-confident masked position."""
+    masked_conf = jnp.where(block_mask, conf, -jnp.inf)
+    above = masked_conf >= tau
+    top1 = select_topk_in_block(conf, block_mask, 1)
+    return above | top1

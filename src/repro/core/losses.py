@@ -1,0 +1,79 @@
+"""CDLM training objectives (paper §4.2, Eqs. 4–7).
+
+All three losses operate on per-position logits and boolean position masks:
+
+- ``distillation_loss`` — forward KL(p_teacher || q_student) on positions
+  newly unmasked between y and y* (U_y). Teacher distributions are
+  reconstructed from the stored last-hidden buffer through the (frozen)
+  teacher lm_head — the paper's 30× storage trick (App. A.1).
+- ``consistency_loss`` — forward KL(q_student(y*) || q_student(y)) on
+  positions still masked at y* (S_y), with the y* branch stop-gradiented
+  (the consistency-model target network, Song et al. 2023).
+- ``dlm_loss`` — the masked-denoising objective (Eq. 6) with 1/t weighting.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _masked_mean(per_pos, mask):
+    """Mean over selected positions, normalized per example then batched
+    (matches the 1/|U_y| inner average in Eqs. 4–5)."""
+    mask = mask.astype(jnp.float32)
+    per_example = jnp.sum(per_pos * mask, axis=-1) / jnp.maximum(mask.sum(-1), 1.0)
+    has_any = (mask.sum(-1) > 0).astype(jnp.float32)
+    return jnp.sum(per_example * has_any) / jnp.maximum(has_any.sum(), 1.0)
+
+
+def forward_kl(p_logits, q_logits):
+    """KL(p || q) per position; logits (..., V)."""
+    p_logp = jax.nn.log_softmax(p_logits.astype(jnp.float32), axis=-1)
+    q_logp = jax.nn.log_softmax(q_logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(p_logp)
+    return jnp.sum(p * (p_logp - q_logp), axis=-1)
+
+
+def reverse_kl(p_logits, q_logits):
+    return forward_kl(q_logits, p_logits)
+
+
+def distillation_loss(student_logits, teacher_logits, newly_unmasked,
+                      kl_direction: str = "forward"):
+    """Eq. 4. ``newly_unmasked``: bool (b, L) = U_y."""
+    teacher_logits = jax.lax.stop_gradient(teacher_logits)
+    kl = forward_kl(teacher_logits, student_logits) if kl_direction == "forward" \
+        else reverse_kl(teacher_logits, student_logits)
+    return _masked_mean(kl, newly_unmasked)
+
+
+def consistency_loss(student_logits_y, student_logits_ystar, still_masked,
+                     kl_direction: str = "forward"):
+    """Eq. 5. y* branch is the stop-gradient target q_{phi^-}."""
+    target = jax.lax.stop_gradient(student_logits_ystar)
+    kl = forward_kl(target, student_logits_y) if kl_direction == "forward" \
+        else reverse_kl(target, student_logits_y)
+    return _masked_mean(kl, still_masked)
+
+
+def dlm_loss(logits, targets, masked, t):
+    """Eq. 6: -1/t * sum_{i masked} log q(y_i | y_t, x), averaged over batch.
+
+    t: (b,) the per-example masking ratio."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    # one-hot contraction instead of take_along_axis: a gather over the
+    # model-sharded vocab dim would all-gather (b, L, V) logits; the einsum
+    # reduces per-shard and psums a (b, L) tensor (EXPERIMENTS.md §Perf H1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    tok_logp = jnp.einsum("...v,...v->...", logp, onehot)
+    t = jnp.maximum(jnp.asarray(t, jnp.float32), 1e-3)
+    per_example = -jnp.sum(tok_logp * masked.astype(jnp.float32), axis=-1) / t
+    # normalize by generation length so the scale matches across configs
+    return jnp.mean(per_example) / targets.shape[-1]
+
+
+def cdlm_total(l_distill, l_cons, l_dlm, *, w_distill, w_cons, w_dlm):
+    """Eq. 7."""
+    return w_distill * l_distill + w_cons * l_cons + w_dlm * l_dlm

@@ -1,0 +1,117 @@
+"""Attention-visibility builders (paper Fig. 2).
+
+Three modes:
+
+- ``bidirectional``: the teacher DLM — every position attends everywhere.
+- ``block_causal``: the CDLM student — a position attends to the prompt, all
+  *completed* blocks before its own block, and every position (incl. future)
+  of its *own* block. Block index of position p (p >= prompt_len) is
+  ``(p - prompt_len) // block_size``; prompt positions form block -1.
+- ``causal``: standard AR mask (RWKV-style backbones, AR baselines).
+
+Masks are never materialized at full L×L unless the caller asks: everything
+is expressed as a predicate over (q_positions, kv_positions) so chunked/flash
+attention can evaluate visibility tile-by-tile.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax.numpy as jnp
+
+BIDIRECTIONAL = "bidirectional"
+BLOCK_CAUSAL = "block_causal"
+CAUSAL = "causal"
+
+NEG_INF = -1e30  # finite "minus infinity" keeps softmax NaN-free on empty rows
+
+
+def block_index(pos, prompt_len: int, block_size: int):
+    """Block id of each position; prompt (pos < prompt_len) -> -1."""
+    pos = jnp.asarray(pos)
+    blk = (pos - prompt_len) // block_size
+    return jnp.where(pos < prompt_len, -1, blk)
+
+
+def visible(
+    q_pos,
+    kv_pos,
+    *,
+    mode: str,
+    prompt_len: int = 0,
+    block_size: int = 1,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Boolean visibility matrix of shape (len(q_pos), len(kv_pos)).
+
+    ``window`` intersects a sliding window: for ``causal`` it is the usual
+    backward window ``0 <= q-k < window``; for (block-)bidirectional modes it
+    is symmetric ``|q-k| < window`` so within-block future positions stay
+    visible (gemma2 local layers under the CDLM student mask).
+    """
+    q = jnp.asarray(q_pos)[:, None]
+    k = jnp.asarray(kv_pos)[None, :]
+    if mode == BIDIRECTIONAL:
+        vis = jnp.ones((q.shape[0], k.shape[1]), dtype=bool)
+    elif mode == CAUSAL:
+        vis = k <= q
+    elif mode == BLOCK_CAUSAL:
+        qb = block_index(q, prompt_len, block_size)
+        kb = block_index(k, prompt_len, block_size)
+        vis = kb <= qb
+    else:
+        raise ValueError(f"unknown mask mode {mode!r}")
+    if window is not None:
+        if mode == CAUSAL:
+            vis = vis & (q - k < window)
+        else:
+            vis = vis & (jnp.abs(q - k) < window)
+    return vis
+
+
+def bias_from_visible(vis: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.where(vis, jnp.zeros((), dtype), jnp.full((), NEG_INF, dtype))
+
+
+def make_bias_fn(
+    *,
+    mode: str,
+    prompt_len: int = 0,
+    block_size: int = 1,
+    window: Optional[int] = None,
+    kv_valid_len=None,
+):
+    """Returns ``f(q_pos, kv_pos) -> additive bias (q, k)`` for flash/chunked
+    attention. ``kv_valid_len`` (scalar) additionally hides cache slots at or
+    beyond the currently-filled cache length."""
+
+    def f(q_pos, kv_pos):
+        vis = visible(q_pos, kv_pos, mode=mode, prompt_len=prompt_len,
+                      block_size=block_size, window=window)
+        if kv_valid_len is not None:
+            vis = vis & (jnp.asarray(kv_pos)[None, :] < kv_valid_len)
+        return bias_from_visible(vis)
+
+    return f
+
+
+def full_bias(
+    seq_len: int,
+    *,
+    mode: str,
+    prompt_len: int = 0,
+    block_size: int = 1,
+    window: Optional[int] = None,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """(seq, seq) additive bias — only for short sequences / tests."""
+    pos = jnp.arange(seq_len)
+    return bias_from_visible(
+        visible(pos, pos, mode=mode, prompt_len=prompt_len,
+                block_size=block_size, window=window), dtype)
+
+
+block_causal_bias = partial(full_bias, mode=BLOCK_CAUSAL)
+bidirectional_bias = partial(full_bias, mode=BIDIRECTIONAL)
+causal_bias = partial(full_bias, mode=CAUSAL)

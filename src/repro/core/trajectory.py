@@ -1,0 +1,114 @@
+"""Trajectory collection for CDLM training (paper Alg. 1, App. A.1).
+
+The teacher decodes block-wise with ``N = L_g`` steps, finalizing exactly one
+top-confidence token per step, at each temperature in the augmentation set.
+Because the unmasking process is *monotone*, the full trajectory
+``T_x = (x_{t_0}, ..., x_{t_N})`` is stored losslessly as
+``(final_tokens, finalized_at)``: state ``y`` at step index ``s`` is
+reconstructed by re-masking every position finalized at step >= s. The
+hidden-state buffer ``H ∈ R^{L_g × d}`` records the teacher's last hidden
+state at each position's finalization moment (the paper's ~30× cheaper
+alternative to storing |V|-dim logits).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CDLMConfig, ModelConfig
+from repro.core.sampler import SamplerSpec, vanilla_blockwise
+
+
+def state_at(final_tokens, finalized_at, step, mask_id: int):
+    """Reconstruct trajectory state y_{t_step} from the compact encoding.
+
+    final_tokens/finalized_at: (..., L_g); step: scalar or (...,) int."""
+    step = jnp.asarray(step)
+    while step.ndim < final_tokens.ndim - 0:
+        step = step[..., None] if step.ndim < final_tokens.ndim else step
+    revealed = (finalized_at >= 0) & (finalized_at < step)
+    return jnp.where(revealed, final_tokens, mask_id)
+
+
+def block_completion_step(t_start, block_size: int):
+    """t_end: the step at which t_start's active block completes (at most B
+    steps later; strictly greater than t_start)."""
+    return (t_start // block_size + 1) * block_size
+
+
+def position_sets(finalized_at, t_start, t_end):
+    """U_y (newly unmasked between y and y*) and S_y (still masked at y*)."""
+    t_start = jnp.asarray(t_start)[..., None]
+    t_end = jnp.asarray(t_end)[..., None]
+    u = (finalized_at >= t_start) & (finalized_at < t_end)
+    s = finalized_at >= t_end
+    return u, s
+
+
+def collect(params, prompts, gt_answers, *, cfg: ModelConfig,
+            cdlm: CDLMConfig, key, extras=None) -> Dict[str, jnp.ndarray]:
+    """Run Alg. 1 over one batch of prompts for every temperature in the
+    augmentation set. Returns stacked arrays with leading dim
+    ``len(temperatures) * batch``.
+
+    prompts: (b, prompt_len) int32; gt_answers: (b, gen_len) int32.
+    """
+    extras = extras or {}
+    outs = {"prompt": [], "gt": [], "final": [], "finalized_at": [],
+            "hidden": []}
+    for tau in cdlm.temperatures:
+        key, sub = jax.random.split(key)
+        spec = SamplerSpec(prompt_len=prompts.shape[1],
+                           gen_len=cdlm.gen_length,
+                           block_size=cdlm.block_size,
+                           temperature=float(tau), early_stop=False)
+        res, finalized_at, hidden = vanilla_blockwise(
+            params, prompts, cfg=cfg, spec=spec, key=sub, extras=extras,
+            record_hidden=True)
+        outs["prompt"].append(prompts)
+        outs["gt"].append(gt_answers)
+        outs["final"].append(res.tokens[:, prompts.shape[1]:])
+        outs["finalized_at"].append(finalized_at)
+        outs["hidden"].append(hidden)
+    return {k: jnp.concatenate(v, axis=0) for k, v in outs.items()}
+
+
+def sample_training_pair(dataset: Dict[str, jnp.ndarray], key, batch_size: int,
+                         *, cfg: ModelConfig, cdlm: CDLMConfig):
+    """Alg. 2 lines 4–6: sample trajectory entries and a (y, y*) state pair.
+
+    Returns a dict with canvases ``y``/``y_star`` (b, P+L_g), position masks
+    ``u_mask``/``s_mask`` over the canvas, the teacher hidden slice
+    (b, L_g, d) and ground-truth answers (b, L_g)."""
+    n = dataset["final"].shape[0]
+    G, B = cdlm.gen_length, cdlm.block_size
+    k1, k2 = jax.random.split(key)
+    idx = jax.random.randint(k1, (batch_size,), 0, n)
+    prompt = dataset["prompt"][idx]
+    final = dataset["final"][idx]
+    fat = dataset["finalized_at"][idx]
+    hidden = dataset["hidden"][idx]
+    gt = dataset["gt"][idx]
+
+    t_start = jax.random.randint(k2, (batch_size,), 0, G)
+    t_end = jnp.minimum(block_completion_step(t_start, B), G)
+
+    y_gen = state_at(final, fat, t_start[:, None], cfg.mask_token_id)
+    ystar_gen = state_at(final, fat, t_end[:, None], cfg.mask_token_id)
+    u_mask, s_mask = position_sets(fat, t_start, t_end)
+
+    y = jnp.concatenate([prompt, y_gen], axis=1)
+    y_star = jnp.concatenate([prompt, ystar_gen], axis=1)
+    pad = jnp.zeros((batch_size, prompt.shape[1]), bool)
+    return {
+        "y": y, "y_star": y_star,
+        "u_mask": jnp.concatenate([pad, u_mask], axis=1),
+        "s_mask": jnp.concatenate([pad, s_mask], axis=1),
+        "teacher_hidden": hidden,
+        "final": final,
+        "gt": gt,
+        "prompt": prompt,
+    }

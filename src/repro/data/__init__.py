@@ -1,0 +1,2 @@
+from repro.data.loader import Corpus  # noqa: F401
+from repro.data.synthetic import TaskSpec, answer_mask, sample_batch, score, verify  # noqa: F401

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots CDLM optimizes.
+
+- ``block_attn``  — block-causal flash attention (training / prefill);
+- ``decode_attn`` — flash-decode of a B-token active block vs the KV cache
+                    (the §4.3 serving hot loop), GQA groups folded into
+                    query rows for MXU utilization;
+- ``xent``        — fused streaming large-vocab softmax cross-entropy
+                    (150k–256k-vocab lm-head loss without (T, V) logits).
+
+Each subpackage: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd model-layout wrapper), ``ref.py`` (pure-jnp oracle). Validated with
+``interpret=True`` shape/dtype sweeps in tests/test_kernels.py; on real TPU
+pass ``interpret=False``.
+"""
+from repro.kernels import block_attn, decode_attn, xent  # noqa: F401

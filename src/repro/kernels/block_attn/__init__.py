@@ -1,0 +1,3 @@
+from repro.kernels.block_attn.block_attn import block_attention  # noqa: F401
+from repro.kernels.block_attn.ops import flash_block_attention  # noqa: F401
+from repro.kernels.block_attn.ref import block_attention_ref  # noqa: F401

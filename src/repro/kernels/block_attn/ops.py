@@ -1,0 +1,74 @@
+"""Jit'd public wrapper for the block-causal flash-attention kernel.
+
+Handles the model-side GQA layout (b, L, Kv, G, hd), pads L to the tile
+grid (padded KV rows are masked out by position — they land in the
+"future" of every real query under causal/block-causal; for bidirectional
+we pass an explicit valid length via a window trick is not needed because
+padded queries are discarded and padded keys get NEG_INF through the
+``kv_len`` argument), expands KV heads, and flattens batch×heads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_attn.block_attn import block_attention
+
+
+def _pad_to(x, axis, mult):
+    L = x.shape[axis]
+    pad = (-L) % mult
+    if pad == 0:
+        return x, L
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), L
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "prompt_len", "block_size", "window", "scale",
+                     "softcap", "block_q", "block_k", "interpret"))
+def flash_block_attention(q, k, v, *, mode: str = "block_causal",
+                          prompt_len: int = 0, block_size: int = 1,
+                          window: Optional[int] = None, scale: float = 1.0,
+                          softcap: Optional[float] = None, block_q: int = 128,
+                          block_k: int = 128, interpret: bool = True):
+    """q: (b, L, Kv, G, hd); k/v: (b, L, Kv, hd) -> (b, L, Kv, G, hd) fp32.
+
+    Self-attention over a full sequence (training / prefill). Padding rows
+    added to reach the tile grid are hidden from real queries by extending
+    the block-causal/causal structure (padded positions live strictly in
+    the future); for ``bidirectional`` the wrapper masks them by assigning
+    padded keys to a never-visible trailing CDLM block.
+    """
+    b, L, Kv, G, hd = q.shape
+    # pad sequence to tile grid
+    qp, _ = _pad_to(q, 1, block_q)
+    kp, _ = _pad_to(k, 1, block_k)
+    vp, _ = _pad_to(v, 1, block_k)
+    Lp = qp.shape[1]
+    Lkp = kp.shape[1]
+
+    eff_mode = mode
+    if mode == "bidirectional" and Lkp != L:
+        # treat padding as a trailing block under block_causal with a huge
+        # block: real positions form block 0, padded keys block >= 1
+        eff_mode = "block_causal"
+        prompt_len = 0
+        block_size = L
+
+    # expand KV heads for GQA and flatten (b, Kv, G) -> bh
+    qf = qp.transpose(0, 2, 3, 1, 4).reshape(b * Kv * G, Lp, hd)
+    kf = jnp.repeat(kp.transpose(0, 2, 1, 3).reshape(b * Kv, Lkp, hd), G, axis=0)
+    vf = jnp.repeat(vp.transpose(0, 2, 1, 3).reshape(b * Kv, Lkp, hd), G, axis=0)
+
+    out = block_attention(qf, kf, vf, mode=eff_mode, prompt_len=prompt_len,
+                          block_size=block_size, window=window, scale=scale,
+                          softcap=softcap, block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    out = out.reshape(b, Kv, G, Lp, hd).transpose(0, 3, 1, 2, 4)
+    return out[:, :L]

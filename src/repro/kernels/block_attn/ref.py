@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the block-causal flash-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def visibility(Lq: int, Lk: int, *, mode: str, prompt_len: int,
+               block_size: int, window: Optional[int]) -> jnp.ndarray:
+    q = jnp.arange(Lq)[:, None]
+    k = jnp.arange(Lk)[None, :]
+    if mode == "bidirectional":
+        vis = jnp.ones((Lq, Lk), bool)
+    elif mode == "causal":
+        vis = k <= q
+    elif mode == "block_causal":
+        qb = jnp.where(q < prompt_len, -1, (q - prompt_len) // block_size)
+        kb = jnp.where(k < prompt_len, -1, (k - prompt_len) // block_size)
+        vis = kb <= qb
+    else:
+        raise ValueError(mode)
+    if window is not None:
+        if mode == "causal":
+            vis = vis & (q - k < window)
+        else:
+            vis = vis & (jnp.abs(q - k) < window)
+    return vis
+
+
+def block_attention_ref(q, k, v, *, mode: str = "block_causal",
+                        prompt_len: int = 0, block_size: int = 1,
+                        window: Optional[int] = None, scale: float = 1.0,
+                        softcap: Optional[float] = None) -> jnp.ndarray:
+    """q: (b, h, Lq, d); k/v: (b, h, Lk, d) — heads pre-broadcast (GQA
+    expansion happens in ops.py). Returns (b, h, Lq, d) fp32."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    vis = visibility(q.shape[2], k.shape[2], mode=mode, prompt_len=prompt_len,
+                     block_size=block_size, window=window)
+    s = jnp.where(vis[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

@@ -1,0 +1,3 @@
+from repro.kernels.decode_attn.decode_attn import decode_attention_partial  # noqa: F401
+from repro.kernels.decode_attn.ops import decode_attention, softmax_combine  # noqa: F401
+from repro.kernels.decode_attn.ref import decode_attention_ref  # noqa: F401

@@ -1,0 +1,72 @@
+"""Jit'd wrapper: full CDLM decode-step attention = kernel partials over the
+cache ⊕ in-block bidirectional part, combined by online-softmax merge."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.decode_attn import NEG_INF, decode_attention_partial
+
+
+def softmax_combine(parts):
+    """Merge [(acc, m, l), ...] unnormalized online-softmax partials.
+
+    Shared by this kernel and the sequence-parallel sharded decode
+    (repro.parallel.seq_decode)."""
+    m = functools.reduce(jnp.maximum, [p[1] for p in parts])
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    acc = sum(p[0] * jnp.where(jnp.isfinite(p[1]), jnp.exp(p[1] - m_safe), 0.0)
+              for p in parts)
+    l = sum(p[2] * jnp.where(jnp.isfinite(p[1]), jnp.exp(p[1] - m_safe), 0.0)
+            for p in parts)
+    return acc / jnp.maximum(l, 1e-30)
+
+
+def _block_partial(q, k_blk, v_blk, *, scale, softcap, window, g):
+    """In-block (Bq×Bq) attention partials in plain jnp — tiny."""
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k_blk.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if window is not None:
+        BqG, Bq = q.shape[1], k_blk.shape[1]
+        qpos = jnp.arange(BqG)[:, None] // g
+        kpos = jnp.arange(Bq)[None, :]
+        s = jnp.where(jnp.abs(qpos - kpos) < window, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bqk,bkh->bqh", p, v_blk.astype(jnp.float32))
+    return acc, m, l
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "softcap", "window", "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, k_blk, v_blk, cache_len, *,
+                     scale: float = 1.0, softcap: Optional[float] = None,
+                     window: Optional[int] = None, block_k: int = 128,
+                     interpret: bool = True):
+    """Model-layout decode attention.
+
+    q: (b, Bq, Kv, G, hd); k/v_cache: (b, S, Kv, hd); k/v_blk: (b, Bq, Kv, hd);
+    cache_len: scalar int32 — valid cache prefix. Returns (b, Bq, Kv, G, hd).
+    """
+    b, Bq, Kv, G, hd = q.shape
+    S = k_cache.shape[1]
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(b * Kv, Bq * G, hd)
+    kcf = k_cache.transpose(0, 2, 1, 3).reshape(b * Kv, S, hd)
+    vcf = v_cache.transpose(0, 2, 1, 3).reshape(b * Kv, S, hd)
+    kbf = k_blk.transpose(0, 2, 1, 3).reshape(b * Kv, Bq, hd)
+    vbf = v_blk.transpose(0, 2, 1, 3).reshape(b * Kv, Bq, hd)
+
+    cache_part = decode_attention_partial(
+        qf, kcf, vcf, cache_len, scale=scale, softcap=softcap, window=window,
+        g=G, block_k=block_k, interpret=interpret)
+    blk_part = _block_partial(qf, kbf, vbf, scale=scale, softcap=softcap,
+                              window=window, g=G)
+    out = softmax_combine([cache_part, blk_part])
+    return out.reshape(b, Kv, Bq, G, hd).transpose(0, 2, 1, 3, 4)

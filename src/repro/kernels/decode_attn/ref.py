@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-decode kernel: a B-token active block
+attending to a (dynamically valid) KV cache plus its own fresh block KV."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, k_blk, v_blk, cache_len, *,
+                         scale: float = 1.0, softcap: Optional[float] = None,
+                         window: Optional[int] = None):
+    """q: (b, Bq, Kv, G, hd); caches: (b, S, Kv, hd); block kv: (b, Bq, Kv, hd).
+
+    Query i sits at absolute position cache_len + i; cache slot s holds
+    position s (valid iff s < cache_len); within-block attention is
+    bidirectional (CDLM refinement). Returns (b, Bq, Kv, G, hd) fp32."""
+    b, Bq, Kv, G, hd = q.shape
+    S = k_cache.shape[1]
+    k_all = jnp.concatenate([k_cache, k_blk], axis=1)
+    v_all = jnp.concatenate([v_cache, v_blk], axis=1)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                   k_all.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kv_pos = jnp.concatenate([jnp.arange(S), cache_len + jnp.arange(Bq)])
+    valid = jnp.concatenate([jnp.arange(S) < cache_len, jnp.ones((Bq,), bool)])
+    q_pos = cache_len + jnp.arange(Bq)
+    vis = valid[None, :] & jnp.ones((Bq, 1), bool)
+    if window is not None:
+        vis = vis & (jnp.abs(q_pos[:, None] - kv_pos[None, :]) < window)
+    s = jnp.where(vis[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p, v_all.astype(jnp.float32))

@@ -1,0 +1,3 @@
+from repro.kernels.xent.ops import fused_xent  # noqa: F401
+from repro.kernels.xent.ref import xent_ref  # noqa: F401
+from repro.kernels.xent.xent import xent_forward  # noqa: F401

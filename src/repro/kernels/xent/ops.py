@@ -1,0 +1,89 @@
+"""Public fused-xent op with custom VJP.
+
+Forward: the Pallas streaming kernel (no (T, V) logits in HBM). Backward:
+the same vocab-tiled schedule expressed as a ``lax.scan`` over vocab chunks
+(dh += (p - 1y) @ Wᵀ, dW += hᵀ (p - 1y)), recomputing each logit tile —
+identical memory behavior, one more matmul pass (the standard
+recompute-softmax trade)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xent.xent import xent_forward
+
+
+def _pad_t(x, mult, fill=0):
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x, x.shape[0]
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill), x.shape[0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fused_xent(hidden, w, targets, block_t=128, block_v=512, interpret=True):
+    """Per-token cross-entropy (T,) without materializing logits."""
+    loss, _ = _fwd(hidden, w, targets, block_t, block_v, interpret)
+    return loss
+
+
+def _fwd(hidden, w, targets, block_t, block_v, interpret):
+    V = w.shape[1]
+    if V % block_v != 0:
+        # pick the largest tile that divides V (keeps kernel exact)
+        for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+            if V % cand == 0:
+                block_v = cand
+                break
+    hp, T = _pad_t(hidden, block_t)
+    yp, _ = _pad_t(targets, block_t)
+    loss = xent_forward(hp, w, yp, block_t=block_t, block_v=block_v,
+                        interpret=interpret)[:T]
+    return loss, (hidden, w, targets)
+
+
+def _bwd(block_t, block_v, interpret, res, g):
+    hidden, w, targets = res
+    T, d = hidden.shape
+    V = w.shape[1]
+    chunk = max(block_v, 512)
+    while V % chunk != 0:
+        chunk //= 2
+    n = V // chunk
+    hf = hidden.astype(jnp.float32)
+
+    # pass 1: logsumexp stats (recompute, tiled)
+    def stat_step(carry, j):
+        m, l = carry
+        wj = jax.lax.dynamic_slice_in_dim(w, j * chunk, chunk, 1).astype(jnp.float32)
+        lo = hf @ wj
+        mj = jnp.maximum(m, lo.max(-1, keepdims=True))
+        l = l * jnp.exp(m - mj) + jnp.exp(lo - mj).sum(-1, keepdims=True)
+        return (mj, l), None
+
+    m0 = jnp.full((T, 1), -jnp.inf)
+    (m, l), _ = jax.lax.scan(stat_step, (m0, jnp.zeros((T, 1))), jnp.arange(n))
+    logz = m + jnp.log(jnp.maximum(l, 1e-30))
+
+    # pass 2: gradients, tiled
+    def grad_step(dh, j):
+        wj = jax.lax.dynamic_slice_in_dim(w, j * chunk, chunk, 1).astype(jnp.float32)
+        lo = hf @ wj
+        p = jnp.exp(lo - logz)
+        vpos = j * chunk + jnp.arange(chunk)[None, :]
+        p = p - (vpos == targets[:, None])
+        p = p * g[:, None]
+        dh = dh + p @ wj.T
+        dwj = hf.T @ p
+        return dh, dwj
+
+    dh, dw_chunks = jax.lax.scan(grad_step, jnp.zeros((T, d)), jnp.arange(n))
+    # scan stacks to (n, d, chunk): reorder to (d, V)
+    dw = jnp.swapaxes(dw_chunks, 0, 1).reshape(d, V)
+    return dh.astype(hidden.dtype), dw.astype(w.dtype), None
+
+
+fused_xent.defvjp(_fwd, _bwd)

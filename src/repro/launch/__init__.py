@@ -1,0 +1,2 @@
+# NOTE: do not import jax (or anything that initializes jax) at package
+# import time here — dryrun.py must be able to set XLA_FLAGS first.

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination on 512 placeholder host devices, print memory/cost analysis and
+record the three-term roofline (brief §MULTI-POD DRY-RUN / §ROOFLINE).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun ... --seq-parallel-decode   # §Perf variant
+Results append to experiments/dryrun/<tag>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ASSIGNED_IDS, get_config
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.launch.specs import SkipPair, build_plan
+from repro.roofline import analyze
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            fsdp: bool = True, seq_parallel_decode: bool = False,
+            efficient_loss: bool = False, verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.time()
+    plan = build_plan(arch, shape_name, mesh, fsdp=fsdp,
+                      seq_parallel_decode=seq_parallel_decode,
+                      efficient_loss=efficient_loss)
+    with mesh:
+        lowered = jax.jit(plan.fn, in_shardings=plan.in_shardings).lower(
+            *plan.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            }
+    except Exception:
+        pass
+
+    report = analyze(compiled, lowered, cfg=get_config(arch),
+                     shape_name=shape_name, mesh_name=mesh_name,
+                     chips=n_chips(mesh), tokens=plan.meta["tokens"],
+                     kind=plan.meta["kind"])
+    rec = report.to_dict()
+    rec.update({"status": "ok", "lower_s": t_lower, "compile_s": t_compile,
+                "memory_analysis": mem, "meta": plan.meta,
+                "fsdp": fsdp, "seq_parallel_decode": seq_parallel_decode})
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK  "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+        if mem:
+            print(f"  memory_analysis/chip: temp={mem['temp_bytes']/2**30:.2f}GiB "
+                  f"args={mem['argument_bytes']/2**30:.2f}GiB "
+                  f"(HBM/chip: 16GiB)")
+        print(f"  cost: {rec['hlo_flops']:.3e} FLOPs, "
+              f"{rec['hlo_bytes']:.3e} B accessed, "
+              f"{rec['coll_bytes']:.3e} B collectives "
+              f"{rec['coll_detail']['counts']}")
+        print(f"  roofline terms/chip: compute={rec['compute_s']*1e3:.2f}ms "
+              f"memory={rec['memory_s']*1e3:.2f}ms "
+              f"collective={rec['collective_s']*1e3:.2f}ms "
+              f"-> {rec['bottleneck']}-bound; useful={rec['useful_ratio']:.2f}")
+    return rec
+
+
+def _cost_of(arch, shape_name, mesh, k, **kw):
+    plan = build_plan(arch, shape_name, mesh, roofline_periods=k, **kw)
+    with mesh:
+        lowered = jax.jit(plan.fn, in_shardings=plan.in_shardings).lower(
+            *plan.args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    from repro.roofline.hlo import collective_bytes
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = lowered.as_text()
+    coll = collective_bytes(text)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll_wire": coll["wire_bytes"],
+            "coll_total": coll["total_bytes"]}
+
+
+def _analytic_prefill_attention(cfg, shape, chips):
+    """Per-chip attention score FLOPs + flash KV-restream bytes for the
+    prefill shape — the chunked ("flash") impl hides these inside scan
+    bodies, so the extrapolated prefill costs add them analytically
+    (EXPERIMENTS.md §Dry-run measurement note)."""
+    from repro.configs.base import ATTN, ATTN_LOCAL
+    b = shape.global_batch
+    Lq = shape.seq_len + cfg.n_prefix_embeds
+    flops_pp = 0.0
+    bytes_pp = 0.0
+    q_tile = 1024
+    for mixer, _ in cfg.layer_period:
+        if mixer not in (ATTN, ATTN_LOCAL):
+            continue
+        Lk_eff = (min(cfg.sliding_window, Lq) if mixer == ATTN_LOCAL
+                  and cfg.sliding_window else Lq)
+        flops_pp += 4.0 * Lq * Lk_eff * cfg.n_heads * cfg.head_dim * b / chips
+        bytes_pp += ((Lq / q_tile) * Lk_eff * cfg.n_kv_heads * cfg.head_dim
+                     * 2 * b / chips)
+    return flops_pp, bytes_pp
+
+
+def extrapolate_record(rec, *, multi_pod=False, fsdp=True,
+                       seq_parallel_decode=False, efficient_loss=False):
+    """Correct the scan-undercounted costs: compile unrolled depth-1 and
+    depth-2 variants, extrapolate linearly to the full period count.
+    (XLA cost_analysis counts while/scan bodies once — verified.)"""
+    from repro.configs.base import INPUT_SHAPES, TPU_V5E
+    arch, shape = rec["arch"], rec["shape"]
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kw = dict(fsdp=fsdp, seq_parallel_decode=seq_parallel_decode,
+              efficient_loss=efficient_loss)
+    c1 = _cost_of(arch, shape, mesh, 1, **kw)
+    c2 = _cost_of(arch, shape, mesh, 2, **kw)
+    n = cfg.n_periods
+    ex = {key: c1[key] + (c2[key] - c1[key]) * (n - 1) for key in c1}
+    if shape == "prefill_32k":
+        af, ab = _analytic_prefill_attention(cfg, INPUT_SHAPES[shape],
+                                             rec["chips"])
+        ex["flops"] += af * n
+        ex["bytes"] += ab * n
+        ex["analytic_attention"] = {"flops_per_period": af,
+                                    "bytes_per_period": ab}
+    hw = TPU_V5E
+    rec["raw_scan"] = {k: rec[k] for k in
+                       ("hlo_flops", "hlo_bytes", "coll_bytes", "compute_s",
+                        "memory_s", "collective_s", "bottleneck",
+                        "useful_ratio")}
+    rec["hlo_flops"] = ex["flops"]
+    rec["hlo_bytes"] = ex["bytes"]
+    rec["coll_bytes"] = ex["coll_total"]
+    rec["compute_s"] = ex["flops"] / hw.peak_flops
+    rec["memory_s"] = ex["bytes"] / hw.hbm_bw
+    rec["collective_s"] = ex["coll_wire"] / hw.ici_bw
+    terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+             "collective": rec["collective_s"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["useful_ratio"] = (rec["model_flops"] / (ex["flops"] * rec["chips"])
+                           if ex["flops"] else 0.0)
+    rec["extrapolated"] = {"per_period": {k: c2[k] - c1[k] for k in c1},
+                           "base": c1, "n_periods": n,
+                           "note": "unrolled depth-1/2 dense-attention "
+                                   "variants, linear in periods"}
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--seq-parallel-decode", action="store_true")
+    ap.add_argument("--efficient-loss", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--extrapolate", action="store_true",
+                    help="correct scan-undercounted roofline costs on "
+                         "existing records via depth-1/2 unrolled compiles")
+    args = ap.parse_args()
+
+    if args.extrapolate:
+        tag = args.out or ("dryrun_multipod" if args.multi_pod else "dryrun")
+        path = os.path.join("experiments", "dryrun", f"{tag}.json")
+        results = json.load(open(path))
+        archs = list(ASSIGNED_IDS) if args.arch == "all" else [args.arch]
+        shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+        for rec in results:
+            if (rec.get("status") != "ok" or rec["arch"] not in archs
+                    or rec["shape"] not in shapes
+                    or "extrapolated" in rec
+                    or rec.get("seq_parallel_decode", False)
+                    != args.seq_parallel_decode):
+                continue
+            t0 = time.time()
+            try:
+                extrapolate_record(rec, multi_pod=args.multi_pod,
+                                   fsdp=not args.no_fsdp,
+                                   seq_parallel_decode=args.seq_parallel_decode)
+                print(f"[{rec['arch']} × {rec['shape']}] extrapolated "
+                      f"({time.time()-t0:.0f}s) -> {rec['bottleneck']}-bound "
+                      f"compute={rec['compute_s']*1e3:.1f}ms "
+                      f"memory={rec['memory_s']*1e3:.1f}ms "
+                      f"coll={rec['collective_s']*1e3:.1f}ms "
+                      f"useful={rec['useful_ratio']:.2f}")
+            except Exception as e:
+                print(f"[{rec['arch']} × {rec['shape']}] extrapolation "
+                      f"failed: {type(e).__name__}: {e}")
+            json.dump(results, open(path, "w"), indent=1, default=str)
+        return
+
+    archs = list(ASSIGNED_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    tag = args.out or ("dryrun_multipod" if args.multi_pod else "dryrun")
+    path = os.path.join("experiments", "dryrun", f"{tag}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    results = []
+    if os.path.exists(path):
+        results = json.load(open(path))
+    have = {(r["arch"], r["shape"], r.get("seq_parallel_decode", False),
+             r.get("fsdp", True)) for r in results if r.get("status") == "ok"}
+
+    for arch in archs:
+        for shape in shapes:
+            key = (arch, shape, args.seq_parallel_decode, not args.no_fsdp)
+            if key in have:
+                print(f"[{arch} × {shape}] cached, skip")
+                continue
+            try:
+                rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                              fsdp=not args.no_fsdp,
+                              seq_parallel_decode=args.seq_parallel_decode,
+                              efficient_loss=args.efficient_loss)
+            except SkipPair as e:
+                rec = {"arch": arch, "shape": shape, "status": "skipped",
+                       "reason": str(e)}
+                print(f"[{arch} × {shape}] SKIP: {e}")
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"[{arch} × {shape}] ERROR: {type(e).__name__}: {e}")
+            results = [r for r in results
+                       if not (r["arch"] == arch and r["shape"] == shape
+                               and r.get("seq_parallel_decode", False)
+                               == args.seq_parallel_decode
+                               and r.get("fsdp", True) == (not args.no_fsdp))]
+            results.append(rec)
+            json.dump(results, open(path, "w"), indent=1, default=str)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"\n{n_ok}/{len(results)} OK -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""§Perf hillclimb driver: run named dry-run variants for the three chosen
+(arch × shape) pairs and record extrapolation-corrected roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.perf [--only tag]
+"""
+import argparse
+import json
+import time
+import traceback
+
+from repro.launch.dryrun import extrapolate_record, run_one
+
+# (tag, arch, shape, run_one kwargs)
+VARIANTS = [
+    # H1 — worst useful-ratio + the paper's own training step
+    ("h1_train_slicefix", "qwen2-0.5b", "train_4k", {}),
+    ("h1_train_efficient_loss", "qwen2-0.5b", "train_4k",
+     {"efficient_loss": True}),
+    # H2 — most collective-bound decode (MoE all-to-all), §4.3 serving step
+    ("h2_kimi_decode_slicefix", "kimi-k2-1t-a32b", "decode_32k", {}),
+    ("h2_kimi_decode_seqpar", "kimi-k2-1t-a32b", "decode_32k",
+     {"seq_parallel_decode": True}),
+    # H1 iteration 2+3: replicate lm-head contraction dim + one-hot
+    # token-logp contraction (see sharding.py / losses.py comments)
+    ("h1_train_headfix", "qwen2-0.5b", "train_4k",
+     {"efficient_loss": True}),
+    # H1 iteration 3: Megatron-style fused-axis sharding of the
+    # non-contraction weight dims (kills the batch-replication all-reduces)
+    ("h1_train_tpfsdp_fix", "qwen2-0.5b", "train_4k",
+     {"efficient_loss": True}),
+    ("h1b_110b_train_tpfsdp", "qwen1.5-110b", "train_4k",
+     {"efficient_loss": True}),
+    # H2 iteration 2: bounded dropless capacity (C = 8x balanced load)
+    ("h2_kimi_decode_capfix", "kimi-k2-1t-a32b", "decode_32k", {}),
+    # H3 — long-context decode, beyond-paper sequence-parallel cache
+    ("h3_110b_long_slicefix", "qwen1.5-110b", "long_500k", {}),
+    ("h3_110b_long_seqpar", "qwen1.5-110b", "long_500k",
+     {"seq_parallel_decode": True}),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    path = os.path.join("experiments", "perf.json")
+    results = json.load(open(path)) if os.path.exists(path) else {}
+
+    for tag, arch, shape, kw in VARIANTS:
+        if args.only and args.only not in tag:
+            continue
+        if tag in results:
+            print(f"[{tag}] cached")
+            continue
+        t0 = time.time()
+        try:
+            rec = run_one(arch, shape, verbose=False, **kw)
+            extrapolate_record(rec, seq_parallel_decode=kw.get(
+                "seq_parallel_decode", False),
+                efficient_loss=kw.get("efficient_loss", False))
+            rec["tag"] = tag
+            rec["variant_kwargs"] = kw
+            results[tag] = rec
+            print(f"[{tag}] ({time.time()-t0:.0f}s) "
+                  f"compute={rec['compute_s']*1e3:.1f}ms "
+                  f"memory={rec['memory_s']*1e3:.1f}ms "
+                  f"collective={rec['collective_s']*1e3:.1f}ms "
+                  f"-> {rec['bottleneck']}-bound useful={rec['useful_ratio']:.2f}")
+            top = rec["coll_detail"]["top_ops"][:3]
+            for op in top:
+                print(f"    top-coll: {op['kind']} {op['bytes']/2**20:.1f}MiB "
+                      f"{op['shape']}")
+        except Exception as e:
+            print(f"[{tag}] FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+        json.dump(results, open(path, "w"), indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

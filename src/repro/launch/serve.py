@@ -1,0 +1,56 @@
+"""Serving launcher CLI: load a checkpoint (or train the cached toy assets)
+and serve batched requests with any sampler.
+
+    PYTHONPATH=src python -m repro.launch.serve --sampler cdlm --requests 32
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sampler", default="cdlm",
+                    choices=["vanilla", "fast_dllm", "dual_cache",
+                             "interval_cache", "cdlm", "ar"])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--threshold", type=float, default=0.9)
+    ap.add_argument("--ckpt", default=None,
+                    help="npz checkpoint (defaults to cached bench assets)")
+    args = ap.parse_args()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                    "..", "..", ".."))
+    from benchmarks import common
+    from repro.configs.base import ServeConfig
+    from repro.serving import Engine, Request, efficiency_report
+
+    if args.ckpt:
+        import jax
+        from repro.checkpoint import restore
+        from repro.models import init_model
+        params = restore(init_model(jax.random.PRNGKey(0), common.CFG),
+                         args.ckpt)
+    else:
+        params = (common.get_student() if args.sampler == "cdlm"
+                  else common.get_teacher())
+
+    serve = ServeConfig(max_batch=args.batch,
+                        block_size=common.CDLM_CFG.block_size,
+                        gen_length=common.TASK.gen_len,
+                        sampler=args.sampler,
+                        conf_threshold=args.threshold)
+    eng = Engine(params, common.CFG, serve, prompt_len=common.TASK.prompt_len)
+    ev = common.corpus().eval_batch(args.requests)
+    reqs = [Request(prompt=p, id=i) for i, p in enumerate(ev["prompt"])]
+    eng.warmup()
+    resp = eng.generate(reqs)
+    rep = efficiency_report(resp)
+    print(f"{args.sampler}: TPS={rep['tps']:.0f} "
+          f"latency={rep['latency_s']*1e3:.1f}ms steps={rep['steps']:.1f} "
+          f"gen_len={rep['gen_length']:.1f}  ({len(resp)} requests)")
+
+
+if __name__ == "__main__":
+    main()

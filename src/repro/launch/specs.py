@@ -1,0 +1,341 @@
+"""Per-(arch × input-shape) step functions + ShapeDtypeStruct input specs
+for the multi-pod dry-run.
+
+Shapes (assigned):
+- train_4k:    the CDLM 3-objective train step (AR step for rwkv6),
+               batch 256 × seq 4096 (prompt 2048 + generation 2048).
+- prefill_32k: block-causal prompt prefill emitting the exact KV cache.
+- decode_32k:  one §4.3 refinement step of the active B=32 block against a
+               32k cache (1-token step for rwkv6), batch 128.
+- long_500k:   same against a 524288-token cache, batch 1 — sub-quadratic
+               paths only (SSM state / SWA / sliding-window decode variant /
+               sequence-parallel sharded cache). Skipped for whisper-base
+               (DESIGN.md §6).
+
+Everything here is ``jax.eval_shape``-abstract: no parameter or cache is
+ever materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    ATTN,
+    ATTN_LOCAL,
+    INPUT_SHAPES,
+    MAMBA,
+    RWKV,
+    CDLMConfig,
+    ModelConfig,
+    TrainConfig,
+)
+from repro.configs.registry import get_config
+from repro.core import masks
+from repro.models import forward, init_model
+from repro.optim import adamw
+from repro.parallel import (
+    batch_axes,
+    cache_spec,
+    make_sharded_decode_attention,
+    param_specs,
+)
+from repro.training.steps import ar_loss, cdlm_loss
+
+
+class SkipPair(Exception):
+    """(arch, shape) combination intentionally skipped — reason in args."""
+
+
+BLOCK = 32  # the paper's B
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Abstract param / cache trees
+# ---------------------------------------------------------------------------
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    from repro.core.cache import init_cache
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len,
+                                             dtype=cfg.dtype))
+
+
+def cache_shardings(cache_abs, mesh, cfg: ModelConfig, batch: int,
+                    *, seq_shard: bool):
+    b_ax = batch_axes(mesh, batch)
+    kv_ok = cfg.n_kv_heads % mesh.shape["model"] == 0
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in ("k", "v", "ck", "cv"):
+            if seq_shard and name in ("k", "v"):
+                return _named(mesh, P(None, b_ax, "model", None, None))
+            return _named(mesh, P(None, b_ax, None,
+                                  "model" if kv_ok else None, None))
+        if name == "ssm":          # (np, b, e, N)
+            return _named(mesh, P(None, b_ax, "model", None))
+        if name == "conv":         # (np, b, dc-1, e)
+            return _named(mesh, P(None, b_ax, None, "model"))
+        if name == "S":            # (np, b, H, hs, hs)
+            return _named(mesh, P(None, b_ax, "model", None, None))
+        if name in ("tm_shift", "cm_shift"):
+            return _named(mesh, P(None, b_ax, "model"))
+        return _named(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abs)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DryRunPlan:
+    fn: Callable                 # jit-able function
+    args: Tuple[Any, ...]        # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    meta: Dict[str, Any]
+
+
+def _train_plan(cfg: ModelConfig, mesh, shape, *, fsdp: bool = True,
+                fwd_kw=None, efficient_loss: bool = False):
+    fwd_kw = fwd_kw or {}
+    b, L = shape.global_batch, shape.seq_len
+    Pl = L // 2
+    G = L - Pl
+    cdlm = CDLMConfig(block_size=BLOCK, gen_length=G, prompt_length=Pl)
+    tcfg = TrainConfig(remat=True)
+    b_ax = batch_axes(mesh, b)
+    params = abstract_params(cfg)
+    pspecs = param_specs(params, mesh, fsdp=fsdp)
+    pshard = jax.tree_util.tree_map(lambda s: _named(mesh, s), pspecs)
+    opt = jax.eval_shape(adamw.init, params)
+    oshard = adamw.AdamWState(
+        step=_named(mesh, P()),
+        m=jax.tree_util.tree_map(lambda s: _named(mesh, s), pspecs),
+        v=jax.tree_util.tree_map(lambda s: _named(mesh, s), pspecs))
+    tok = lambda *s: _sds(s, jnp.int32)
+    boo = lambda *s: _sds(s, jnp.bool_)
+
+    extras = {}
+    extras_shard = {}
+    if cfg.is_encoder_decoder:
+        extras["encoder_embeds"] = _sds((b, cfg.encoder_seq_len, cfg.d_model),
+                                        cfg.dtype)
+        extras_shard["encoder_embeds"] = _named(mesh, P(b_ax, None, None))
+    if cfg.n_prefix_embeds:
+        extras["prefix_embeds"] = _sds((b, cfg.n_prefix_embeds, cfg.d_model),
+                                       cfg.dtype)
+        extras_shard["prefix_embeds"] = _named(mesh, P(b_ax, None, None))
+
+    if cfg.family == "ssm":
+        # CDLM inapplicable (DESIGN.md §5): AR next-token training step
+        batch = {"prompt": tok(b, Pl), "answer": tok(b, G),
+                 "maskable": boo(b, G)}
+        bshard = {k: _named(mesh, P(b_ax, None)) for k in batch}
+
+        def fn(params, opt_state, batch, key):
+            (loss, _), grads = jax.value_and_grad(ar_loss, has_aux=True)(
+                params, batch, key, cfg=cfg, remat=True, **fwd_kw)
+            params, opt_state, _ = adamw.update(grads, opt_state, params, tcfg)
+            return params, opt_state, loss
+    else:
+        student_mode = masks.BLOCK_CAUSAL
+        batch = {
+            "y": tok(b, L), "y_star": tok(b, L),
+            "u_mask": boo(b, L), "s_mask": boo(b, L),
+            "teacher_hidden": _sds((b, G, cfg.d_model), cfg.dtype),
+            "gt": tok(b, G), "prompt": tok(b, Pl),
+        }
+        bshard = {
+            "y": _named(mesh, P(b_ax, None)),
+            "y_star": _named(mesh, P(b_ax, None)),
+            "u_mask": _named(mesh, P(b_ax, None)),
+            "s_mask": _named(mesh, P(b_ax, None)),
+            "teacher_hidden": _named(mesh, P(b_ax, None, None)),
+            "gt": _named(mesh, P(b_ax, None)),
+            "prompt": _named(mesh, P(b_ax, None)),
+        }
+        batch.update(extras)
+        bshard.update(extras_shard)
+        teacher_head = jax.eval_shape(
+            lambda: init_model(jax.random.PRNGKey(0), cfg))["embed"]
+        th_shard = jax.tree_util.tree_map(
+            lambda s: _named(mesh, s), param_specs(teacher_head, mesh,
+                                                   fsdp=fsdp))
+
+        def fn(params, opt_state, batch, key, teacher_head):
+            extras_in = {k: batch[k] for k in ("encoder_embeds",
+                                               "prefix_embeds") if k in batch}
+            core = {k: v for k, v in batch.items()
+                    if k not in ("encoder_embeds", "prefix_embeds")}
+            (loss, _), grads = jax.value_and_grad(cdlm_loss, has_aux=True)(
+                params, None, core, key, cfg=cfg, cdlm=cdlm,
+                teacher_head=teacher_head, use_lora=False, remat=True,
+                student_mode=student_mode, extras=extras_in,
+                efficient_loss=efficient_loss, **fwd_kw)
+            params, opt_state, _ = adamw.update(grads, opt_state, params, tcfg)
+            return params, opt_state, loss
+
+        key = _sds((2,), jnp.uint32)
+        return DryRunPlan(
+            fn=fn,
+            args=(params, opt, batch, key, teacher_head),
+            in_shardings=(pshard, oshard, bshard, _named(mesh, P()), th_shard),
+            meta={"kind": "train_cdlm", "tokens": b * L,
+                  "gen_tokens": b * G})
+
+    key = _sds((2,), jnp.uint32)
+    return DryRunPlan(
+        fn=fn, args=(params, opt, batch, key),
+        in_shardings=(pshard, oshard, bshard, _named(mesh, P())),
+        meta={"kind": "train_ar", "tokens": b * L, "gen_tokens": b * G})
+
+
+def _prefill_plan(cfg: ModelConfig, mesh, shape, *, fsdp: bool = True,
+                  fwd_kw=None):
+    fwd_kw = fwd_kw or {}
+    b, L = shape.global_batch, shape.seq_len
+    b_ax = batch_axes(mesh, b)
+    params = abstract_params(cfg)
+    pshard = jax.tree_util.tree_map(
+        lambda s: _named(mesh, s), param_specs(params, mesh, fsdp=fsdp))
+    tokens = _sds((b, L), jnp.int32)
+    tshard = _named(mesh, P(b_ax, None))
+    extras = {}
+    eshard = {}
+    if cfg.is_encoder_decoder:
+        extras["encoder_embeds"] = _sds((b, cfg.encoder_seq_len, cfg.d_model),
+                                        cfg.dtype)
+        eshard["encoder_embeds"] = _named(mesh, P(b_ax, None, None))
+    if cfg.n_prefix_embeds:
+        extras["prefix_embeds"] = _sds((b, cfg.n_prefix_embeds, cfg.d_model),
+                                       cfg.dtype)
+        eshard["prefix_embeds"] = _named(mesh, P(b_ax, None, None))
+    mode = masks.CAUSAL if cfg.family == "ssm" else masks.BLOCK_CAUSAL
+
+    attn_impl = fwd_kw.pop("attn_impl",
+                           "chunked" if not cfg.is_attention_free else "auto")
+
+    def fn(params, tokens, extras):
+        out = forward(params, tokens, cfg=cfg, mode=mode,
+                      prompt_len=L + cfg.n_prefix_embeds, block_size=BLOCK,
+                      attn_impl=attn_impl, remat=True, **extras, **fwd_kw)
+        # emit last-position logits + the cache emissions (committed by the
+        # serving layer); returning both is what a server materializes.
+        return out.logits[:, -1], out.emissions
+
+    return DryRunPlan(
+        fn=fn, args=(params, tokens, extras),
+        in_shardings=(pshard, tshard, eshard),
+        meta={"kind": "prefill", "tokens": b * L, "gen_tokens": 0})
+
+
+def _decode_plan(cfg: ModelConfig, mesh, shape, *, fsdp: bool = True,
+                 seq_parallel_decode: bool = False, fwd_kw=None):
+    fwd_kw = fwd_kw or {}
+    b, S = shape.global_batch, shape.seq_len
+    long = shape.name == "long_500k"
+    if long and cfg.name == "whisper-base":
+        raise SkipPair(
+            "whisper-base × long_500k: 30 s/1500-frame encoder with a ~448-"
+            "token decoder has no meaningful 524k-token decode state "
+            "(DESIGN.md §6)")
+    if long:
+        sub_quadratic = (cfg.is_attention_free or cfg.family in ("hybrid",)
+                         or cfg.sliding_window is not None
+                         or cfg.long_context_window is not None)
+        if not sub_quadratic:
+            raise SkipPair(f"{cfg.name} × long_500k: no sub-quadratic path")
+
+    Bq = 1 if (cfg.family == "ssm" ) else BLOCK
+    b_ax = batch_axes(mesh, b)
+    params = abstract_params(cfg)
+    pshard = jax.tree_util.tree_map(
+        lambda s: _named(mesh, s), param_specs(params, mesh, fsdp=fsdp))
+
+    # attention-free archs carry O(1) state, no (b, S, kv, hd) buffers
+    cache_len_max = S
+    cache_abs = abstract_cache(cfg, b, 0 if cfg.is_attention_free else S)
+    # long-context always seq-shards the cache; decode_32k seq-shards only
+    # under the --seq-parallel-decode §Perf variant
+    seq_shard = ((long or seq_parallel_decode)
+                 and not cfg.is_attention_free)
+    cshard = cache_shardings(cache_abs, mesh, cfg, b, seq_shard=seq_shard)
+
+    tokens = _sds((b, Bq), jnp.int32)
+    tshard = _named(mesh, P(b_ax, None))
+    clen = _sds((), jnp.int32)
+
+    use_long_window = bool(long and cfg.long_context_window)
+    mode = masks.CAUSAL if cfg.family == "ssm" else masks.BLOCK_CAUSAL
+    dec_fn = None
+    if seq_parallel_decode and seq_shard:
+        dec_fn = make_sharded_decode_attention(mesh, batch_axis=b_ax)
+
+    attn_impl = fwd_kw.pop("attn_impl",
+                           "chunked" if S > 65536 else "auto")
+
+    def fn(params, tokens, cache, cache_len):
+        out = forward(params, tokens, cfg=cfg, mode=mode, prompt_len=0,
+                      block_size=Bq if Bq > 1 else 1,
+                      positions=cache_len + jnp.arange(Bq),
+                      cache=cache, cache_len=cache_len,
+                      use_long_window=use_long_window,
+                      decode_attention_fn=dec_fn,
+                      attn_impl=attn_impl, **fwd_kw)
+        return out.logits, out.emissions
+
+    return DryRunPlan(
+        fn=fn, args=(params, tokens, cache_abs, clen),
+        in_shardings=(pshard, tshard, cshard, _named(mesh, P())),
+        meta={"kind": "decode", "tokens": b * Bq, "gen_tokens": b * Bq,
+              "cache_len": S, "seq_shard": seq_shard})
+
+
+def build_plan(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
+               seq_parallel_decode: bool = False,
+               roofline_periods: Optional[int] = None,
+               efficient_loss: bool = False) -> DryRunPlan:
+    """``roofline_periods=k`` builds a depth-k *unrolled* variant with dense
+    attention for cost extrapolation (XLA counts scan/while bodies once in
+    cost_analysis, so the scanned full-depth compile under-reports FLOPs —
+    the dry-run proof still uses the scanned version)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    fwd_kw = {}
+    if roofline_periods is not None:
+        k = roofline_periods
+        cfg = dataclasses.replace(
+            cfg, n_layers=k * len(cfg.layer_period),
+            n_encoder_layers=(k if cfg.is_encoder_decoder else 0))
+        fwd_kw = {"unroll_layers": True}
+        # dense attention fully counts score FLOPs/bytes in cost_analysis
+        # (chunked hides them inside scan bodies) — but dense at Lk=32k is a
+        # pathological SPMD compile, so prefill keeps chunked and the
+        # attention part is added analytically (see dryrun.extrapolate).
+        if shape_name != "prefill_32k":
+            fwd_kw["attn_impl"] = "dense"
+    if shape.kind == "train":
+        return _train_plan(cfg, mesh, shape, fsdp=fsdp, fwd_kw=fwd_kw,
+                           efficient_loss=efficient_loss)
+    if shape.kind == "prefill":
+        return _prefill_plan(cfg, mesh, shape, fsdp=fsdp, fwd_kw=fwd_kw)
+    return _decode_plan(cfg, mesh, shape, fsdp=fsdp,
+                        seq_parallel_decode=seq_parallel_decode,
+                        fwd_kw=fwd_kw)

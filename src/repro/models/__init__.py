@@ -1,0 +1,1 @@
+from repro.models.transformer import ModelOutput, forward, init_model  # noqa: F401

@@ -1,0 +1,301 @@
+"""Functional neural-net layers shared by every architecture.
+
+Conventions
+-----------
+- Params are plain nested dicts of ``jnp.ndarray``; init functions take a PRNG
+  key + ``ModelConfig`` and return the dict. No module framework.
+- Attention tensors use grouped-query layout:
+  q: ``(batch, Lq, n_kv, q_per_kv, head_dim)``; k/v: ``(batch, Lk, n_kv, head_dim)``.
+- Attention logits/softmax are computed in fp32 regardless of param dtype.
+- Visibility is supplied as ``bias_fn(q_pos, kv_pos, kv_valid) -> (Lq, Lk)``
+  additive bias so chunked ("flash-style") attention never materializes L².
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32, scale=1.0):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"w": jnp.ones((d,), _dtype(cfg)), "b": jnp.zeros((d,), _dtype(cfg))}
+    return {"w": jnp.ones((d,), _dtype(cfg))}
+
+
+def apply_norm(params, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["w"].astype(jnp.float32) + params["b"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * params["w"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """x: (..., L, ..., head_dim); positions: (L,) or (b, L)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    pos = jnp.asarray(positions, jnp.float32)
+    ang = pos[..., None] * freqs  # (..., L, half)
+    # broadcast ang to x's rank: x is (b, L, heads..., hd)
+    while ang.ndim < x.ndim - 1:
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions, d_model: int):
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(10_000.0) / max(half - 1, 1)))
+    ang = jnp.asarray(positions, jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {
+        "wq": dense_init(ks[0], (d, nq * hd), dtype=dt),
+        "wk": dense_init(ks[1], (d, nkv * hd), dtype=dt),
+        "wv": dense_init(ks[2], (d, nkv * hd), dtype=dt),
+        "wo": dense_init(ks[3], (nq * hd, d), dtype=dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nq * hd,), dt)
+        p["bk"] = jnp.zeros((nkv * hd,), dt)
+        p["bv"] = jnp.zeros((nkv * hd,), dt)
+    return p
+
+
+def project_q(params, x, cfg: ModelConfig):
+    b, L, _ = x.shape
+    q = x @ params["wq"]
+    if "bq" in params:
+        q = q + params["bq"]
+    return q.reshape(b, L, cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim)
+
+
+def project_kv(params, x, cfg: ModelConfig):
+    b, L, _ = x.shape
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    k = k.reshape(b, L, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, L, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def out_proj(params, attn_out, cfg: ModelConfig):
+    b, L = attn_out.shape[:2]
+    return attn_out.reshape(b, L, cfg.n_heads * cfg.head_dim) @ params["wo"]
+
+
+def attn_scale(cfg: ModelConfig) -> float:
+    if cfg.query_pre_attn_scalar is not None:
+        return 1.0 / math.sqrt(cfg.query_pre_attn_scalar)
+    return 1.0 / math.sqrt(cfg.head_dim)
+
+
+BiasFn = Callable[..., jnp.ndarray]
+
+
+def _dense_attention(q, k, v, *, q_pos, kv_pos, kv_valid, bias_fn: BiasFn,
+                     scale: float, cap: Optional[float]):
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap)
+    bias = bias_fn(q_pos, kv_pos, kv_valid)  # (Lq, Lk)
+    scores = scores + bias[None, None, None]
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+
+
+def _chunked_attention(q, k, v, *, q_pos, kv_pos, kv_valid, bias_fn: BiasFn,
+                       scale: float, cap: Optional[float], chunk: int,
+                       q_chunk: int = 1024):
+    """Online-softmax ("flash") attention: ``lax.map`` over query chunks ×
+    ``lax.scan`` over KV chunks. Live score memory is O(q_chunk × chunk)
+    instead of O(Lq × Lk)."""
+    b, Lq, Kv, G, hd = q.shape
+    if Lq > q_chunk and Lq % q_chunk == 0:
+        n_q = Lq // q_chunk
+
+        def one(j):
+            qj = jax.lax.dynamic_slice_in_dim(q, j * q_chunk, q_chunk, 1)
+            pj = jax.lax.dynamic_slice_in_dim(jnp.asarray(q_pos),
+                                              j * q_chunk, q_chunk, 0)
+            return _chunked_attention(qj, k, v, q_pos=pj, kv_pos=kv_pos,
+                                      kv_valid=kv_valid, bias_fn=bias_fn,
+                                      scale=scale, cap=cap, chunk=chunk,
+                                      q_chunk=q_chunk)
+
+        out = jax.lax.map(one, jnp.arange(n_q))  # (n_q, b, q_chunk, ...)
+        return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, Lq, Kv, G, hd)
+    Lk = k.shape[1]
+    n_chunks = -(-Lk // chunk)
+    pad = n_chunks * chunk - Lk
+    if kv_valid is None:
+        kv_valid = jnp.ones((Lk,), bool)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(jnp.asarray(kv_pos), (0, pad), constant_values=-1)
+        kv_valid = jnp.pad(kv_valid, (0, pad), constant_values=False)
+
+    # NOTE: chunks are taken with dynamic_slice on the ORIGINAL layout —
+    # an earlier reshape+transpose version forced SPMD "involuntary full
+    # rematerialization" (replicating k/v per period); slicing along the
+    # sequence dim preserves batch/head shardings (EXPERIMENTS.md §Perf).
+    qf = q.astype(jnp.float32) * scale
+    m0 = jnp.full((b, Kv, G, Lq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, Kv, G, Lq), jnp.float32)
+    acc0 = jnp.zeros((b, Lq, Kv, G, hd), jnp.float32)
+
+    def step(carry, j):
+        m, l, acc = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, 1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, 1)
+        posj = jax.lax.dynamic_slice_in_dim(kv_pos, j * chunk, chunk, 0)
+        valj = jax.lax.dynamic_slice_in_dim(kv_valid, j * chunk, chunk, 0)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kj.astype(jnp.float32))
+        s = softcap(s, cap)
+        s = s + bias_fn(q_pos, posj, valj)[None, None, None]
+        mj = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows: exp(-inf - -inf) -> use finite floor
+        mj_safe = jnp.where(jnp.isfinite(mj), mj, 0.0)
+        p = jnp.exp(s - mj_safe[..., None])
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - mj_safe), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha.transpose(0, 3, 1, 2)[..., None]
+        acc = acc + jnp.einsum("bkgqs,bskh->bqkgh", p, vj.astype(jnp.float32))
+        return (mj, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  jnp.arange(n_chunks))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 3, 1, 2)[..., None]
+    return out.astype(v.dtype)
+
+
+def attention_core(q, k, v, *, q_pos, kv_pos, kv_valid=None, bias_fn: BiasFn,
+                   scale: float, cap: Optional[float] = None,
+                   impl: str = "auto", chunk: int = 2048):
+    """Grouped-query attention with pluggable visibility.
+
+    q: (b, Lq, Kv, G, hd); k/v: (b, Lk, Kv, hd) -> (b, Lq, Kv, G, hd)
+    """
+    Lk = k.shape[1]
+    if impl == "auto":
+        impl = "chunked" if Lk >= 4096 else "dense"
+    if impl == "dense":
+        if kv_valid is None:
+            kv_valid = jnp.ones((Lk,), bool)
+        return _dense_attention(q.astype(jnp.float32), k, v, q_pos=q_pos,
+                                kv_pos=kv_pos, kv_valid=kv_valid,
+                                bias_fn=bias_fn, scale=scale, cap=cap)
+    if impl == "chunked":
+        return _chunked_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                  kv_valid=kv_valid, bias_fn=bias_fn,
+                                  scale=scale, cap=cap, chunk=chunk)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "gelu_plain":
+        return {"wi": dense_init(ks[0], (d, d_ff), dtype=dt),
+                "wo": dense_init(ks[1], (d_ff, d), dtype=dt)}
+    return {"wi_gate": dense_init(ks[0], (d, d_ff), dtype=dt),
+            "wi_up": dense_init(ks[1], (d, d_ff), dtype=dt),
+            "wo": dense_init(ks[2], (d_ff, d), dtype=dt)}
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind in ("gelu", "gelu_plain"):
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu_sq":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    if "wi" in params:  # non-gated (whisper)
+        return _act(x @ params["wi"], cfg.activation) @ params["wo"]
+    g = _act(x @ params["wi_gate"], cfg.activation)
+    return (g * (x @ params["wi_up"])) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    p = {"tok": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dtype=dt)
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def lm_head(params, x, cfg: ModelConfig):
+    w = params["tok"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bld,dv->blv", x, w, preferred_element_type=jnp.float32)
+    return softcap(logits, cfg.final_logit_softcap)

@@ -1,0 +1,58 @@
+"""LoRA adapters (paper App. A.2: rank 32/64 on attention + MLP projections).
+
+We store adapters as a sparse mirror of the param tree: a dict keyed by the
+"/"-joined param path of each targeted 2-D matrix, each entry {"a": (in, r),
+"b": (r, out)}. ``merge`` materializes W + (alpha/r)·A·B for the forward —
+at framework scale one would fuse the factored matmul instead; the merged
+form keeps every downstream code path (sharding, caching, kernels)
+unchanged and is exactly equivalent.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TARGETS = ("wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wi")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def init_lora(key, params, *, rank: int,
+              targets: Sequence[str] = DEFAULT_TARGETS) -> Dict[str, dict]:
+    lora = {}
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        name = _path_str(path)
+        tail = name.split("/")[-1]
+        if tail in targets and leaf.ndim >= 2:
+            key, k1 = jax.random.split(key)
+            in_dim, out_dim = leaf.shape[-2], leaf.shape[-1]
+            lead = leaf.shape[:-2]
+            a = (jax.random.normal(k1, (*lead, in_dim, rank)) /
+                 jnp.sqrt(in_dim)).astype(leaf.dtype)
+            b = jnp.zeros((*lead, rank, out_dim), leaf.dtype)
+            lora[name] = {"a": a, "b": b}
+    return lora
+
+
+def merge(params, lora: Dict[str, dict], alpha: float, rank: int):
+    """Return params with W <- W + (alpha/rank) A@B on targeted leaves."""
+    scale = alpha / rank
+
+    def fix(path, leaf):
+        name = _path_str(path)
+        if name in lora:
+            ab = jnp.einsum("...ir,...ro->...io", lora[name]["a"],
+                            lora[name]["b"])
+            return leaf + (scale * ab).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def param_count(lora) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(lora))

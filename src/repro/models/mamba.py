@@ -1,0 +1,137 @@
+"""Mamba selective-SSM block (for the Jamba hybrid).
+
+Training/prefill uses a chunked associative scan: the diagonal recurrence
+``h_t = a_t * h_{t-1} + b_t`` is evaluated with ``lax.associative_scan``
+inside fixed-size chunks wrapped in ``jax.checkpoint`` (rematerialized in the
+backward pass), with a sequential ``lax.scan`` carrying the state across
+chunks. Decode uses a single-step state update (conv window + SSM state),
+which is the Jamba "cache" — O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, dense_init
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    e = cfg.mamba_expand * d
+    N = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    r = dt_rank(cfg)
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (e, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * e), dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (dc, e)) / math.sqrt(dc)).astype(dt),
+        "conv_b": jnp.zeros((e,), dt),
+        "x_proj": dense_init(ks[2], (e, r + 2 * N), dtype=dt),
+        "dt_proj_w": dense_init(ks[3], (r, e), dtype=dt),
+        "dt_proj_b": jnp.full((e,), math.log(math.expm1(0.01)), dt),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),                     # (e, N) fp32
+        "D": jnp.ones((e,), jnp.float32),
+        "out_proj": dense_init(ks[4], (e, d), dtype=dt),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    e = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, e), dtype),
+        "ssm": jnp.zeros((batch, e, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def _ssm_coeffs(params, xz, cfg: ModelConfig):
+    """From post-conv activations u: (b, L, e) produce a_t, b_t, C, dt."""
+    N = cfg.mamba_d_state
+    r = dt_rank(cfg)
+    u = xz
+    proj = u @ params["x_proj"]                        # (b, L, r + 2N)
+    dt_in, B, C = jnp.split(proj, [r, r + N], axis=-1)
+    delta = jax.nn.softplus(dt_in @ params["dt_proj_w"] + params["dt_proj_b"])
+    delta = delta.astype(jnp.float32)                  # (b, L, e)
+    A = -jnp.exp(params["A_log"])                      # (e, N)
+    a = jnp.exp(delta[..., None] * A[None, None])      # (b, L, e, N)
+    # bt: (b, L, e, N) = (delta*u) (b,L,e) outer B (b,L,N)
+    bt = (delta * u.astype(jnp.float32))[..., None] * B.astype(jnp.float32)[:, :, None, :]
+    return a, bt, C.astype(jnp.float32), delta
+
+
+def _chunk_scan(a, b, h0):
+    """Associative scan of h_t = a_t h_{t-1} + b_t within a chunk.
+
+    a, b: (bsz, L, e, N); h0: (bsz, e, N) -> (h_all (bsz, L, e, N), h_last)."""
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    # fold h0 into the first step
+    b = b.at[:, 0].add(a[:, 0] * h0)
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def mamba_forward(params, x, cfg: ModelConfig, *,
+                  state: Optional[dict] = None, chunk: int = 256,
+                  remat: bool = True) -> Tuple[jnp.ndarray, dict]:
+    """x: (b, L, d) -> (y, new_state). Causal; state carries (conv, ssm)."""
+    bsz, L, d = x.shape
+    e = cfg.mamba_expand * d
+    dc = cfg.mamba_d_conv
+    if state is None:
+        state = init_mamba_state(cfg, bsz, dtype=x.dtype)
+
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                   # (b, L, e) each
+
+    # causal depthwise conv with carried window
+    conv_in = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+    windows = [conv_in[:, i:i + L] for i in range(dc)]  # each (b, L, e)
+    u_conv = sum(w * params["conv_w"][i] for i, w in enumerate(windows)) + params["conv_b"]
+    u_conv = jax.nn.silu(u_conv)
+    new_conv = conv_in[:, -(dc - 1):] if dc > 1 else state["conv"]
+
+    a, bt, C, _ = _ssm_coeffs(params, u_conv, cfg)     # (b, L, e, N)...
+
+    n_chunks = -(-L // chunk)
+    pad = n_chunks * chunk - L
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bt = jnp.pad(bt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    ac = a.reshape(bsz, n_chunks, chunk, e, -1).transpose(1, 0, 2, 3, 4)
+    bc = bt.reshape(bsz, n_chunks, chunk, e, -1).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(bsz, n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, xs):
+        aj, bj, Cj = xs
+        h_all, h_last = _chunk_scan(aj, bj, h)
+        yj = jnp.einsum("blen,bln->ble", h_all, Cj)    # contract state dim
+        return h_last, yj
+
+    if remat:
+        chunk_step = jax.checkpoint(chunk_step)
+    h_last, ys = jax.lax.scan(chunk_step, state["ssm"], (ac, bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, n_chunks * chunk, e)[:, :L]
+    y = y + u_conv.astype(jnp.float32) * params["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    return out, {"conv": new_conv.astype(state["conv"].dtype), "ssm": h_last}
+
+
+def mamba_step(params, x, cfg: ModelConfig, state: dict) -> Tuple[jnp.ndarray, dict]:
+    """Single-token decode step. x: (b, 1, d)."""
+    return mamba_forward(params, x, cfg, state=state, chunk=1, remat=False)

@@ -1,0 +1,138 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Design (TPU-native, see DESIGN.md §4): instead of the GShard (T, E, C)
+dispatch einsum — whose one-hot tensor is quadratic in tokens×experts — we
+compute each token's position-in-expert by a cumulative sum over the one-hot
+routing matrix (T, E), then scatter tokens into an expert-major buffer
+``(E, C, d)``, run a single batched expert einsum ``(E,C,d)x(E,d,f)``, and
+gather back. Over-capacity tokens are dropped (residual passthrough), the
+standard Switch/GShard behavior. With experts sharded over the ``model`` mesh
+axis the scatter/gather lower to all-to-all-style collectives.
+
+A shared expert (Kimi/DeepSeek style) is applied densely to every token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act, _dtype, dense_init
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(f)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "wi_gate": (jax.random.normal(ks[1], (E, d, f)) * std_in).astype(dt),
+        "wi_up": (jax.random.normal(ks[2], (E, d, f)) * std_in).astype(dt),
+        "wo": (jax.random.normal(ks[3], (E, f, d)) * std_out).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi_gate": dense_init(ks2[0], (d, fs), dtype=dt),
+            "wi_up": dense_init(ks2[1], (d, fs), dtype=dt),
+            "wo": dense_init(ks2[2], (fs, d), dtype=dt),
+        }
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    E, k = cfg.n_experts, cfg.experts_per_token
+    c = int(math.ceil(n_tokens * k * cfg.capacity_factor / E))
+    return max(c, 4)
+
+
+def apply_moe(params, x, cfg: ModelConfig,
+              dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, L, d) -> (out, aux_loss).
+
+    ``dropless=True`` sizes expert buffers so no token can be dropped
+    (C = T, worst case all tokens routed to one expert) — used for decode
+    steps where L is a single block, making cached inference *exact*.
+    Capacity-based dropping remains the training configuration; the
+    prefill-vs-decode capacity mismatch is inherent to capacity routing and
+    documented in DESIGN.md.
+    """
+    b, L, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = b * L
+    if dropless:
+        # bounded-worst-case decode capacity: 8x the balanced load (drops
+        # only under pathological imbalance) instead of C=T, which sized
+        # expert buffers E*T and made decode compute/collectives ~E/8x
+        # redundant (EXPERIMENTS.md §Perf H2). Small T keeps exact C=T.
+        import math as _math
+        C = min(T, max(4, _math.ceil(T * K * 8.0 / E)))
+    else:
+        C = capacity(T, cfg)
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)       # (T, K)
+    # normalize the selected gates (top-k renorm, deepseek/mixtral style)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch): E * sum_e f_e * P_e
+    one_hot_all = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32).sum(1)  # (T, E)
+    frac_tokens = one_hot_all.mean(0)
+    frac_probs = probs.mean(0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    out = jnp.zeros((T, d), jnp.float32)
+    for j in range(K):
+        eid = expert_ids[:, j]                       # (T,)
+        gj = gate_vals[:, j]
+        onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)          # (T, E)
+        pos = jnp.cumsum(onehot, axis=0) * onehot                 # rank within expert
+        pos_in_e = jnp.sum(pos, axis=-1) - 1                      # (T,)
+        keep = pos_in_e < C
+        flat_idx = jnp.where(keep, eid * C + pos_in_e, E * C)     # E*C = drop slot
+        # scatter tokens -> (E*C+1, d), last row is the drop bucket
+        buf = jnp.zeros((E * C + 1, d), xt.dtype).at[flat_idx].set(xt)
+        buf = buf[: E * C].reshape(E, C, d)
+        g = _act(jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"]), cfg.activation)
+        u = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+        y = jnp.einsum("ecf,efd->ecd", g * u, params["wo"])       # (E, C, d)
+        y = y.reshape(E * C, d)
+        gathered = jnp.take(y, jnp.minimum(flat_idx, E * C - 1), axis=0)
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        out = out + gathered.astype(jnp.float32) * gj[:, None]
+
+    if "shared" in params:
+        sp = params["shared"]
+        g = _act(xt @ sp["wi_gate"], cfg.activation)
+        out = out + ((g * (xt @ sp["wi_up"])) @ sp["wo"]).astype(jnp.float32)
+
+    return out.reshape(b, L, d).astype(x.dtype), aux
+
+
+def apply_moe_dense_fallback(params, x, cfg: ModelConfig):
+    """Reference path: run all experts on all tokens (tests only)."""
+    b, L, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    g = _act(jnp.einsum("td,edf->tef", xt, params["wi_gate"]), cfg.activation)
+    u = jnp.einsum("td,edf->tef", xt, params["wi_up"])
+    y = jnp.einsum("tef,efd->ted", g * u, params["wo"])   # (T, E, d)
+    w = jnp.zeros((xt.shape[0], cfg.n_experts), jnp.float32)
+    w = jax.vmap(lambda wr, ids, gs: wr.at[ids].add(gs))(w, expert_ids, gate_vals)
+    out = jnp.einsum("te,ted->td", w, y.astype(jnp.float32))
+    if "shared" in params:
+        sp = params["shared"]
+        gg = _act(xt @ sp["wi_gate"], cfg.activation)
+        out = out + ((gg * (xt @ sp["wi_up"])) @ sp["wo"]).astype(jnp.float32)
+    return out.reshape(b, L, d).astype(x.dtype)

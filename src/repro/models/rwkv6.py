@@ -1,0 +1,160 @@
+"""RWKV6 ("Finch") blocks — attention-free, data-dependent decay.
+
+Faithfulness notes (DESIGN.md §8): we keep the architecturally-defining v6
+feature — the *data-dependent per-channel decay* ``w_t = exp(-exp(w0 +
+tanh(x W_a) W_b))`` — and the u-"bonus" first-token path, head-wise state
+``S ∈ R^{hs×hs}``, output group-norm and gating. The v6 data-dependent
+token-shift (ddlerp) is simplified to static per-channel lerp (v5 style).
+
+Training/prefill runs a chunk-rematerialized scan (sequential within chunk,
+``lax.scan`` + ``jax.checkpoint`` across chunks) so activation memory is
+O(T/chunk) states. Decode carries {token-shift, state} — O(1)/token, which
+is why long_500k is trivial for this arch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, dense_init
+
+
+def n_rwkv_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_size
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = n_rwkv_heads(cfg)
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    decay_lora = max(32, d // 16)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt), "mu_w": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "wr": dense_init(ks[0], (d, d), dtype=dt),
+        "wk": dense_init(ks[1], (d, d), dtype=dt),
+        "wv": dense_init(ks[2], (d, d), dtype=dt),
+        "wg": dense_init(ks[3], (d, d), dtype=dt),
+        "wo": dense_init(ks[4], (d, d), dtype=dt),
+        # data-dependent decay (the v6 feature): w0 + tanh(x A) B
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wa": dense_init(ks[5], (d, decay_lora), dtype=dt),
+        "wb": dense_init(ks[6], (decay_lora, d), dtype=dt, scale=0.1),
+        "u": (jax.random.normal(ks[7], (d,)) * 0.1).astype(jnp.float32),
+        "ln_w": jnp.ones((H, hs), jnp.float32),
+        "ln_b": jnp.zeros((H, hs), jnp.float32),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt), "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": dense_init(ks[0], (d, cfg.d_ff), dtype=dt),
+        "wv": dense_init(ks[1], (cfg.d_ff, d), dtype=dt),
+        "wr": dense_init(ks[2], (d, d), dtype=dt),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, hs = n_rwkv_heads(cfg), cfg.rwkv_head_size
+    return {
+        "S": jnp.zeros((batch, H, hs, hs), jnp.float32),
+        "tm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def _token_shift(x, last):
+    """x: (b, L, d); last: (b, d) -> shifted (b, L, d), new_last (b, d)."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu
+
+
+def time_mix(params, x, cfg: ModelConfig, state: dict, *,
+             chunk: int = 256, remat: bool = True) -> Tuple[jnp.ndarray, dict]:
+    b, L, d = x.shape
+    H, hs = n_rwkv_heads(cfg), cfg.rwkv_head_size
+    prev, new_shift = _token_shift(x, state["tm_shift"].astype(x.dtype))
+
+    r = _lerp(x, prev, params["mu_r"]) @ params["wr"]
+    k = _lerp(x, prev, params["mu_k"]) @ params["wk"]
+    v = _lerp(x, prev, params["mu_v"]) @ params["wv"]
+    g = jax.nn.silu(_lerp(x, prev, params["mu_g"]) @ params["wg"])
+    xw = _lerp(x, prev, params["mu_w"])
+    decay_log = -jnp.exp(params["w0"] +
+                         (jnp.tanh(xw @ params["wa"]) @ params["wb"]).astype(jnp.float32))
+    w = jnp.exp(decay_log)                                  # (b, L, d) in (0,1)
+
+    def heads(t):  # (b, L, d) -> (b, L, H, hs) fp32
+        return t.astype(jnp.float32).reshape(b, L, H, hs)
+
+    r, k, v, w = heads(r), heads(k), heads(v), heads(w)
+    u = params["u"].reshape(H, hs)
+
+    n_chunks = -(-L // chunk)
+    pad = n_chunks * chunk - L
+    if pad:
+        z = lambda t, c=0.0: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                                     constant_values=c)
+        r, k, v, w = z(r), z(k), z(v), z(w, 1.0)
+    rc = r.reshape(b, n_chunks, chunk, H, hs).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, n_chunks, chunk, H, hs).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, H, hs).transpose(1, 0, 2, 3, 4)
+    wc = w.reshape(b, n_chunks, chunk, H, hs).transpose(1, 0, 2, 3, 4)
+
+    def inner(S, xs):
+        rt, kt, vt, wt = xs                                 # (b, H, hs)
+        kv = kt[..., :, None] * vt[..., None, :]            # (b, H, hs, hs)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    def chunk_step(S, xs):
+        rj, kj, vj, wj = (t.transpose(1, 0, 2, 3) for t in xs)  # (chunk, b, H, hs)
+        S, ys = jax.lax.scan(inner, S, (rj, kj, vj, wj))
+        return S, ys.transpose(1, 0, 2, 3)                  # (b, chunk, H, hs)
+
+    if remat:
+        chunk_step = jax.checkpoint(chunk_step)
+    S, ys = jax.lax.scan(chunk_step, state["S"], (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, H, hs)[:, :L]
+
+    # per-head group norm
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y * params["ln_w"] + params["ln_b"]
+    y = y.reshape(b, L, d).astype(x.dtype) * g
+    out = y @ params["wo"]
+    return out, {"S": S, "tm_shift": new_shift.astype(state["tm_shift"].dtype)}
+
+
+def channel_mix(params, x, cfg: ModelConfig, state: dict) -> Tuple[jnp.ndarray, dict]:
+    prev, new_shift = _token_shift(x, state["cm_shift"].astype(x.dtype))
+    xk = _lerp(x, prev, params["mu_k"])
+    xr = _lerp(x, prev, params["mu_r"])
+    r = jax.nn.sigmoid(xr @ params["wr"])
+    y = jnp.square(jax.nn.relu(xk @ params["wk"])) @ params["wv"]
+    return r * y, {"cm_shift": new_shift.astype(state["cm_shift"].dtype)}
+
+
+def rwkv_reference_step(params_tm, x_t, S, shift, cfg: ModelConfig):
+    """Single-token oracle for tests: x_t (b, d) -> (y, S, shift)."""
+    y, st = time_mix(params_tm, x_t[:, None, :], cfg,
+                     {"S": S, "tm_shift": shift, "cm_shift": shift},
+                     chunk=1, remat=False)
+    return y[:, 0], st["S"], st["tm_shift"]

@@ -1,0 +1,388 @@
+"""The composable model stack.
+
+One code path serves all ten assigned architectures. A model is a repeated
+*period* of heterogeneous layer slots (``cfg.layer_period``), e.g. gemma2 is
+``((ATTN_LOCAL, MLP), (ATTN, MLP))`` × 23 and jamba is an 8-slot
+Mamba/attention/MoE interleave × 4. Parameters for each slot are stacked
+over periods and the stack is executed with ``lax.scan`` so the HLO (and
+single-core compile time) stays O(period), not O(n_layers) — essential for
+the 61–80 layer archs.
+
+The same ``forward`` implements:
+- full-sequence forward (training / prefill), any mask mode
+  (bidirectional teacher / block-causal student / causal AR);
+- cached decode: a B-token active-block refinement step (or 1-token AR step)
+  against KV/SSM caches, the paper's §4.3 inference unit.
+
+Per-slot "emissions" (new KV, SSM states) are returned stacked so the cache
+layer (`repro.core.cache`) can commit them at block boundaries — CDLM's
+exact block-wise KV caching.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ATTN,
+    ATTN_LOCAL,
+    MAMBA,
+    MLP,
+    MOE,
+    RWKV,
+    RWKV_CM,
+    ModelConfig,
+)
+from repro.core import masks
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MO
+from repro.models import rwkv6 as R
+
+
+class ModelOutput(NamedTuple):
+    logits: jnp.ndarray            # (b, Lq, vocab) fp32
+    hidden: jnp.ndarray            # (b, Lq, d) last hidden (post final norm)
+    emissions: Any                 # per-slot stacked cache/state emissions
+    aux_loss: jnp.ndarray          # MoE load-balance aux (scalar fp32)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_slot(key, cfg: ModelConfig, mixer: str, ffn: str, *, cross: bool):
+    ks = jax.random.split(key, 6)
+    slot = {"norm1": L.init_norm(cfg), "norm2": L.init_norm(cfg)}
+    if mixer in (ATTN, ATTN_LOCAL):
+        slot["attn"] = L.init_attention(ks[0], cfg)
+    elif mixer == MAMBA:
+        slot["mamba"] = M.init_mamba(ks[0], cfg)
+    elif mixer == RWKV:
+        slot["rwkv_tm"] = R.init_time_mix(ks[0], cfg)
+    else:
+        raise ValueError(mixer)
+    if cross:
+        slot["cross"] = L.init_attention(ks[1], cfg, cross=True)
+        slot["norm_cross"] = L.init_norm(cfg)
+    if ffn == MLP:
+        slot["mlp"] = L.init_mlp(ks[2], cfg)
+    elif ffn == MOE:
+        slot["moe"] = MO.init_moe(ks[2], cfg)
+    elif ffn == RWKV_CM:
+        slot["rwkv_cm"] = R.init_channel_mix(ks[2], cfg)
+    else:
+        raise ValueError(ffn)
+    return slot
+
+
+def _stack_slot_init(key, cfg: ModelConfig, mixer: str, ffn: str, n: int,
+                     *, cross: bool):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_slot(k, cfg, mixer, ffn, cross=cross))(keys)
+
+
+def init_model(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2 + len(cfg.layer_period) + cfg.is_encoder_decoder)
+    params = {"embed": L.init_embed(ks[0], cfg), "final_norm": L.init_norm(cfg)}
+    slots = []
+    for i, (mixer, ffn) in enumerate(cfg.layer_period):
+        slots.append(_stack_slot_init(ks[2 + i], cfg, mixer, ffn, cfg.n_periods,
+                                      cross=cfg.is_encoder_decoder))
+    params["slots"] = tuple(slots)
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(ks[1], 2)
+        params["encoder"] = {
+            "slots": (_stack_slot_init(ek[0], cfg, ATTN, MLP,
+                                       cfg.n_encoder_layers, cross=False),),
+            "final_norm": L.init_norm(cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Slot application
+# ---------------------------------------------------------------------------
+def _self_attention_slot(slot, x, *, cfg: ModelConfig, mixer: str, ctx):
+    """Returns (y, emission)."""
+    h = L.apply_norm(slot["norm1"], x, cfg)
+    q = L.project_q(slot["attn"], h, cfg)
+    k, v = L.project_kv(slot["attn"], h, cfg)
+    if cfg.pos_embed == "rope":
+        q = L.rope(q, ctx["q_pos"], cfg.rope_theta)
+        k = L.rope(k, ctx["q_pos"], cfg.rope_theta)
+
+    window = None
+    if mixer == ATTN_LOCAL:
+        window = cfg.sliding_window
+    elif ctx["use_long_window"] and cfg.long_context_window:
+        window = cfg.long_context_window
+
+    emission = {"k": k, "v": v}
+    cache = ctx["cache_slot"]
+    scale = L.attn_scale(cfg)
+    cap = cfg.attn_logit_softcap
+
+    if (cache is not None and "k" in cache
+            and ctx.get("decode_attention_fn") is not None
+            and ctx.get("cache_valid") is None):
+        # pluggable decode path: Pallas flash-decode kernel or the
+        # sequence-parallel shard_map implementation (repro.parallel)
+        out = ctx["decode_attention_fn"](
+            q, cache["k"], cache["v"], k, v, ctx["cache_len"], scale=scale,
+            softcap=cap, window=window)
+    else:
+        if cache is not None and "k" in cache:
+            S = cache["k"].shape[1]
+            k_all = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)],
+                                    axis=1)
+            v_all = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)],
+                                    axis=1)
+            kv_pos = jnp.concatenate([jnp.arange(S), jnp.asarray(ctx["q_pos"])])
+            if ctx.get("cache_valid") is not None:
+                cache_ok = ctx["cache_valid"]
+            else:
+                cache_ok = jnp.arange(S) < ctx["cache_len"]
+            kv_valid = jnp.concatenate([cache_ok,
+                                        jnp.ones((k.shape[1],), bool)])
+        else:
+            k_all, v_all = k, v
+            kv_pos = ctx["q_pos"]
+            kv_valid = None
+
+        bias_fn = masks.make_bias_fn(mode=ctx["mode"],
+                                     prompt_len=ctx["prompt_len"],
+                                     block_size=ctx["block_size"],
+                                     window=window)
+
+        def bias_with_valid(q_pos, k_pos, valid):
+            b = bias_fn(q_pos, k_pos)
+            if valid is not None:
+                b = jnp.where(valid[None, :], b, masks.NEG_INF)
+            return b
+
+        out = ctx["attention_fn"](
+            q, k_all, v_all, q_pos=ctx["q_pos"], kv_pos=kv_pos,
+            kv_valid=kv_valid, bias_fn=bias_with_valid, scale=scale,
+            cap=cap, impl=ctx["attn_impl"])
+    y = L.out_proj(slot["attn"], out, cfg)
+    return x + y, emission
+
+
+def _cross_attention_slot(slot, x, *, cfg: ModelConfig, ctx):
+    h = L.apply_norm(slot["norm_cross"], x, cfg)
+    q = L.project_q(slot["cross"], h, cfg)
+    cache = ctx["cache_slot"]
+    if cache is not None and "ck" in cache:
+        ck, cv = cache["ck"], cache["cv"]
+        emission = {}
+    else:
+        ck, cv = L.project_kv(slot["cross"], ctx["encoder_out"], cfg)
+        emission = {"ck": ck, "cv": cv}
+    enc_len = ck.shape[1]
+
+    def cross_bias(qp, kp, valid):
+        return jnp.zeros((jnp.asarray(qp).shape[0], jnp.asarray(kp).shape[0]),
+                         jnp.float32)
+
+    out = L.attention_core(
+        q, ck, cv, q_pos=ctx["q_pos"], kv_pos=jnp.arange(enc_len), kv_valid=None,
+        bias_fn=cross_bias, scale=L.attn_scale(cfg), cap=None, impl="dense")
+    return x + L.out_proj(slot["cross"], out, cfg), emission
+
+
+def _apply_slot(slot, x, *, cfg: ModelConfig, mixer: str, ffn: str, ctx):
+    emission = {}
+    aux = jnp.zeros((), jnp.float32)
+    cache = ctx["cache_slot"]
+
+    # --- mixer sublayer ---
+    if mixer in (ATTN, ATTN_LOCAL):
+        x, em = _self_attention_slot(slot, x, cfg=cfg, mixer=mixer, ctx=ctx)
+        emission.update(em)
+    elif mixer == MAMBA:
+        h = L.apply_norm(slot["norm1"], x, cfg)
+        state = None
+        if cache is not None and "ssm" in cache:
+            state = {"conv": cache["conv"], "ssm": cache["ssm"]}
+        y, new_state = M.mamba_forward(slot["mamba"], h, cfg, state=state,
+                                       remat=False)
+        x = x + y
+        emission.update(new_state)
+    elif mixer == RWKV:
+        h = L.apply_norm(slot["norm1"], x, cfg)
+        if cache is not None and "S" in cache:
+            state = {"S": cache["S"], "tm_shift": cache["tm_shift"],
+                     "cm_shift": cache["cm_shift"]}
+        else:
+            state = R.init_rwkv_state(cfg, x.shape[0], dtype=x.dtype)
+        y, new_tm = R.time_mix(slot["rwkv_tm"], h, cfg, state, remat=False)
+        x = x + y
+        emission.update(new_tm)
+        ctx = dict(ctx, rwkv_state=state)   # channel mix needs cm_shift
+    else:
+        raise ValueError(mixer)
+
+    # --- cross attention (enc-dec) ---
+    if "cross" in slot and (ctx.get("encoder_out") is not None
+                            or (cache is not None and "ck" in cache)):
+        x, em = _cross_attention_slot(slot, x, cfg=cfg, ctx=ctx)
+        emission.update(em)
+
+    # --- ffn sublayer ---
+    h = L.apply_norm(slot["norm2"], x, cfg)
+    if ffn == MLP:
+        x = x + L.apply_mlp(slot["mlp"], h, cfg)
+    elif ffn == MOE:
+        y, a = MO.apply_moe(slot["moe"], h, cfg,
+                            dropless=ctx.get("moe_dropless", False))
+        x = x + y
+        aux = aux + a
+    elif ffn == RWKV_CM:
+        y, new_cm = R.channel_mix(slot["rwkv_cm"], h, cfg, ctx["rwkv_state"])
+        x = x + y
+        emission.update(new_cm)
+    return x, emission, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack
+# ---------------------------------------------------------------------------
+def _run_stack(slots_params, x, *, cfg: ModelConfig, slot_kinds, ctx,
+               cache=None, remat: bool = False, unroll: bool = False):
+    """Scan the period stack. ``slots_params``/``cache``: tuple over slots,
+    leaves stacked over periods. Returns (x, emissions, aux).
+
+    ``unroll=True`` python-loops the periods instead of ``lax.scan`` — used
+    by the roofline dry-run variants because XLA's cost_analysis counts a
+    scan body once regardless of trip count (verified empirically)."""
+
+    def period_body(carry, xs):
+        x, aux = carry
+        slot_params_t, cache_t = xs
+        emissions_t = []
+        for i, (mixer, ffn) in enumerate(slot_kinds):
+            c = dict(ctx, cache_slot=None if cache_t is None else cache_t[i])
+            x, em, a = _apply_slot(slot_params_t[i], x, cfg=cfg, mixer=mixer,
+                                   ffn=ffn, ctx=c)
+            emissions_t.append(em)
+            aux = aux + a
+        return (x, aux), tuple(emissions_t)
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    init = (x, jnp.zeros((), jnp.float32))
+    if unroll:
+        n = jax.tree_util.tree_leaves(slots_params)[0].shape[0]
+        carry = init
+        ems = []
+        for i in range(n):
+            sp_i = jax.tree_util.tree_map(lambda a: a[i], slots_params)
+            c_i = (None if cache is None
+                   else jax.tree_util.tree_map(lambda a: a[i], cache))
+            carry, em = body(carry, (sp_i, c_i))
+            ems.append(em)
+        (x, aux) = carry
+        emissions = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ems)
+        return x, emissions, aux
+    if cache is None:
+        (x, aux), emissions = jax.lax.scan(
+            lambda c, sp: body(c, (sp, None)), init, slots_params)
+    else:
+        (x, aux), emissions = jax.lax.scan(body, init, (slots_params, cache))
+    return x, emissions, aux
+
+
+def forward(
+    params,
+    tokens: Optional[jnp.ndarray] = None,
+    *,
+    cfg: ModelConfig,
+    mode: str = masks.BIDIRECTIONAL,
+    prompt_len: int = 0,
+    block_size: int = 1,
+    positions: Optional[jnp.ndarray] = None,
+    prefix_embeds: Optional[jnp.ndarray] = None,
+    encoder_embeds: Optional[jnp.ndarray] = None,
+    inputs_embeds: Optional[jnp.ndarray] = None,
+    cache=None,
+    cache_len=None,
+    cache_valid=None,
+    use_long_window: bool = False,
+    attn_impl: str = "auto",
+    attention_fn=None,
+    decode_attention_fn=None,
+    remat: bool = False,
+    unroll_layers: bool = False,
+    logits_slice: Optional[Tuple[int, int]] = None,
+    moe_dropless: Optional[bool] = None,
+) -> ModelOutput:
+    """Run the model.
+
+    tokens: (b, L) int32 (or ``inputs_embeds``). ``prefix_embeds``
+    (b, P, d): stub-frontend embeddings (VLM patches) prepended to the token
+    embeddings — they are part of the prompt for masking purposes.
+    ``encoder_embeds`` (b, enc_len, d): whisper frame embeddings (stub conv
+    frontend) consumed by the encoder. ``cache``/``cache_len``: decode.
+    """
+    if attention_fn is None:
+        attention_fn = L.attention_core
+
+    if inputs_embeds is not None:
+        x = inputs_embeds
+        b, Lt = x.shape[:2]
+    else:
+        b, Lt = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    Lq = x.shape[1]
+
+    if positions is None:
+        base = cache_len if cache_len is not None else 0
+        positions = base + jnp.arange(Lq)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + L.sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)
+
+    # encoder (whisper): bidirectional over stub frame embeddings
+    encoder_out = None
+    if cfg.is_encoder_decoder and encoder_embeds is not None:
+        enc = encoder_embeds
+        enc_pos = jnp.arange(enc.shape[1])
+        if cfg.pos_embed == "sinusoidal":
+            enc = enc + L.sinusoidal_embedding(enc_pos, cfg.d_model).astype(enc.dtype)
+        enc_ctx = dict(
+            mode=masks.BIDIRECTIONAL, prompt_len=0, block_size=1,
+            q_pos=enc_pos, cache_len=None, cache_slot=None,
+            use_long_window=False, attn_impl=attn_impl,
+            attention_fn=attention_fn, encoder_out=None, rwkv_state=None)
+        enc_x, _, _ = _run_stack(params["encoder"]["slots"], enc, cfg=cfg,
+                                 slot_kinds=((ATTN, MLP),), ctx=enc_ctx,
+                                 cache=None, remat=remat,
+                                 unroll=unroll_layers)
+        encoder_out = L.apply_norm(params["encoder"]["final_norm"], enc_x, cfg)
+
+    ctx = dict(
+        mode=mode, prompt_len=prompt_len, block_size=block_size,
+        q_pos=positions, cache_len=cache_len, cache_valid=cache_valid,
+        cache_slot=None, use_long_window=use_long_window, attn_impl=attn_impl,
+        attention_fn=attention_fn, decode_attention_fn=decode_attention_fn,
+        encoder_out=encoder_out, rwkv_state=None,
+        # decode steps (cache present) default to dropless MoE so cached
+        # inference is exact; training/prefill keep capacity dropping.
+        moe_dropless=(cache is not None) if moe_dropless is None else moe_dropless)
+
+    x, emissions, aux = _run_stack(params["slots"], x, cfg=cfg,
+                                   slot_kinds=cfg.layer_period, ctx=ctx,
+                                   cache=cache, remat=remat,
+                                   unroll=unroll_layers)
+
+    hidden = L.apply_norm(params["final_norm"], x, cfg)
+    # perf: the CDLM losses only consume generation-span logits — slicing
+    # before the lm_head avoids materializing (b, L, V) over the prompt half
+    # (EXPERIMENTS.md §Perf iteration 1).
+    head_in = hidden if logits_slice is None else \
+        hidden[:, logits_slice[0]:logits_slice[1]]
+    logits = L.lm_head(params["embed"], head_in, cfg)
+    return ModelOutput(logits=logits, hidden=hidden, emissions=emissions,
+                       aux_loss=aux)

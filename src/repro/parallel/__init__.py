@@ -1,0 +1,8 @@
+from repro.parallel.seq_decode import make_sharded_decode_attention  # noqa: F401
+from repro.parallel.sharding import (  # noqa: F401
+    batch_axes,
+    cache_spec,
+    param_shardings,
+    param_specs,
+    spec_for_leaf,
+)

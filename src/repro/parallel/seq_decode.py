@@ -1,0 +1,120 @@
+"""Sequence-parallel distributed flash-decode (beyond-paper, DESIGN.md §4/§7).
+
+For long-context decode (long_500k) the KV cache dominates memory: sharding
+its *sequence* dim over the ``model`` axis gives each chip S/16 slots. The
+attention softmax then spans shards; we compute per-shard unnormalized
+partials (acc, m, l) locally and merge with one tiny ``psum``-style
+collective over (b, Bq, heads, hd) — the TPU analogue of flash-decode
+split-K, exact to numerics. This replaces XLA's default behavior for
+seq-sharded caches (all-gathering the cache), turning a multi-GB all-gather
+per step into a ~MB collective.
+
+Plugs into ``models.transformer.forward(decode_attention_fn=...)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+NEG_INF = -1e30
+
+
+def _local_partial(q, kc, vc, *, first_pos, cache_len, scale, softcap,
+                   window, g):
+    """Partials over this shard's cache slice. q: (b, BqG, Kv, hd) replct.
+    kc/vc: (b, S_loc, Kv, hd). Positions of local slots: first_pos + i."""
+    S_loc = kc.shape[1]
+    s = jnp.einsum("bqkh,bskh->bkqs", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = first_pos + jnp.arange(S_loc)
+    valid = kpos < cache_len
+    if window is not None:
+        qpos = cache_len + jnp.arange(q.shape[1]) // g
+        valid = valid[None, :] & (qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(valid[None, None], s, NEG_INF)
+    else:
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+    p = jnp.where(jnp.isfinite(m), p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bkqs,bskh->bkqh", p, vc.astype(jnp.float32))
+    return acc, m, l
+
+
+def make_sharded_decode_attention(mesh: Mesh, *, batch_axis, axis: str = "model"):
+    """Returns a ``decode_attention_fn(q, kc, vc, k_blk, v_blk, cache_len,
+    scale=..., softcap=..., window=...)`` with kc/vc sequence-sharded over
+    ``axis``. q layout (b, Bq, Kv, G, hd); caches (b, S, Kv, hd)."""
+
+    def fn(q, kc, vc, k_blk, v_blk, cache_len, *, scale, softcap=None,
+           window=None):
+        b, Bq, Kv, G, hd = q.shape
+        S = kc.shape[1]
+        n_shards = mesh.shape[axis]
+        S_loc = S // n_shards
+        qf = q.transpose(0, 1, 3, 2, 4).reshape(b, Bq * G, Kv, hd)
+        clen = jnp.asarray(cache_len, jnp.int32)
+
+        def local(qf, kc, vc, clen):
+            idx = jax.lax.axis_index(axis)
+            acc, m, l = _local_partial(
+                qf, kc, vc, first_pos=idx * S_loc, cache_len=clen[0],
+                scale=scale, softcap=softcap, window=window, g=G)
+            # merge partials across shards: 3 small collectives
+            m_glob = jax.lax.pmax(m, axis)
+            m_safe = jnp.where(jnp.isfinite(m_glob), m_glob, 0.0)
+            w = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            acc = jax.lax.psum(acc * w, axis)
+            l = jax.lax.psum(l * w, axis)
+            return acc, m_glob, l
+
+        in_specs = (
+            P(batch_axis, None, None, None),          # q replicated over model
+            P(batch_axis, axis, None, None),          # cache seq-sharded
+            P(batch_axis, axis, None, None),
+            P(),                                      # cache_len
+        )
+        out_specs = (P(batch_axis, None, None, None),
+                     P(batch_axis, None, None, None),
+                     P(batch_axis, None, None, None))
+        acc, m, l = shard_map(local, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)(
+            qf, kc, vc, clen.reshape(1))
+
+        # in-block part (tiny) + final merge, replicated math
+        kb = k_blk.transpose(0, 2, 1, 3).reshape(b * Kv, Bq, hd)
+        vb = v_blk.transpose(0, 2, 1, 3).reshape(b * Kv, Bq, hd)
+        qb = qf.transpose(0, 2, 1, 3).reshape(b * Kv, Bq * G, hd)
+        s = jnp.einsum("bqh,bkh->bqk", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        if window is not None:
+            qpos = jnp.arange(Bq * G)[:, None] // G
+            kpos = jnp.arange(Bq)[None, :]
+            s = jnp.where(jnp.abs(qpos - kpos) < window, s, NEG_INF)
+        mb = jnp.max(s, axis=-1, keepdims=True)
+        pb = jnp.exp(s - mb)
+        lb = jnp.sum(pb, axis=-1, keepdims=True)
+        accb = jnp.einsum("bqk,bkh->bqh", pb, vb.astype(jnp.float32))
+        accb = accb.reshape(b, Kv, Bq * G, hd)
+        mb = mb.reshape(b, Kv, Bq * G, 1)
+        lb = lb.reshape(b, Kv, Bq * G, 1)
+
+        m_tot = jnp.maximum(m, mb)
+        m_safe = jnp.where(jnp.isfinite(m_tot), m_tot, 0.0)
+        w1 = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        w2 = jnp.where(jnp.isfinite(mb), jnp.exp(mb - m_safe), 0.0)
+        out = (acc * w1 + accb * w2) / jnp.maximum(l * w1 + lb * w2, 1e-30)
+        out = out.reshape(b, Kv, Bq, G, hd).transpose(0, 2, 1, 3, 4)
+        return out.astype(q.dtype)
+
+    return fn

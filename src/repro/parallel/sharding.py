@@ -1,0 +1,152 @@
+"""Sharding rules: param-path regex → logical dim assignment → PartitionSpec.
+
+Policy (DESIGN.md §7):
+- tensor parallelism over the ``model`` mesh axis: attention heads
+  (via the fused head*hd projection dim), FFN hidden, vocab, MoE experts,
+  Mamba/RWKV inner channels;
+- FSDP over the ``data`` axis on the complementary matrix dim (ZeRO-3
+  style — optimizer states inherit the same spec);
+- the ``pod`` axis is a pure data axis (batch / FSDP outer).
+
+Every rule degrades per-leaf: an axis is applied to a dim only when the dim
+size is divisible by the mesh-axis extent (e.g. qwen2's 14 query heads or
+whisper's odd 51865 vocab fall back to replication on that dim).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, per-dim logical axes, applied right-aligned to the trailing
+# dims — leading stack dims (periods) are never sharded)
+# logical axes: "tp" = model axis, "fsdp" = data(+pod) axis
+RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    # embeddings / head: the d dim is the lm-head CONTRACTION dim — FSDP-
+    # sharding it over "data" collides with batch sharding and forces an
+    # all-reduce of (b, L, V/chip) fp32 logits (EXPERIMENTS.md §Perf H1);
+    # vocab over "model" shards the bulk, d stays replicated.
+    (r"embed/tok$", ("tp", None)),
+    (r"embed/head$", (None, "tp")),
+    # attention / dense mlp: shard the NON-contraction dim over the fused
+    # (model, data) axes — Megatron column/row parallel at 256-way. FSDP on
+    # the contraction dim collided with batch sharding and forced XLA to
+    # replicate activations + all-reduce over "data" (§Perf H1 iter 3); the
+    # row-parallel all-reduce of (b, L, d) activations is the cheap, normal
+    # TP collective.
+    (r"(attn|cross)/w[qkv]$", (None, "tp_fsdp")),
+    (r"(attn|cross)/wo$", ("tp_fsdp", None)),
+    (r"(attn|cross)/b[qkv]$", ("tp",)),
+    (r"mlp/wi(_gate|_up)?$", (None, "tp_fsdp")),
+    (r"mlp/wo$", ("tp_fsdp", None)),
+    # MoE: expert-parallel on the expert dim
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/wi(_gate|_up)$", ("tp", "fsdp", None)),
+    (r"moe/wo$", ("tp", None, "fsdp")),
+    (r"moe/shared/wi(_gate|_up)$", ("fsdp", "tp")),
+    (r"moe/shared/wo$", ("tp", "fsdp")),
+    # mamba
+    (r"mamba/in_proj$", ("fsdp", "tp")),
+    (r"mamba/conv_[wb]$", (None, "tp")),
+    (r"mamba/x_proj$", ("tp", None)),
+    (r"mamba/dt_proj_w$", (None, "tp")),
+    (r"mamba/dt_proj_b$", ("tp",)),
+    (r"mamba/A_log$", ("tp", None)),
+    (r"mamba/D$", ("tp",)),
+    (r"mamba/out_proj$", ("tp", "fsdp")),
+    # rwkv6
+    (r"rwkv_tm/w[rkvg]$", ("fsdp", "tp")),
+    (r"rwkv_tm/wo$", ("tp", "fsdp")),
+    (r"rwkv_tm/wa$", ("fsdp", None)),
+    (r"rwkv_tm/wb$", (None, "tp")),
+    (r"rwkv_cm/wk$", ("fsdp", "tp")),
+    (r"rwkv_cm/wv$", ("tp", "fsdp")),
+    (r"rwkv_cm/wr$", ("fsdp", "tp")),
+    # everything else (norms, mus, scalars): replicated
+)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def logical_to_mesh(mesh: Mesh, logical: Optional[str], *, fsdp: bool):
+    """Map logical axis -> concrete mesh axis/axes (or None)."""
+    if logical == "tp":
+        return "model"
+    if logical == "tp_fsdp":
+        if not fsdp:
+            return "model"
+        return (("model", "pod", "data") if "pod" in mesh.axis_names
+                else ("model", "data"))
+    if logical == "fsdp":
+        if not fsdp:
+            return None
+        return ("pod", "data") if "pod" in mesh.axis_names else "data"
+    return None
+
+
+def spec_for_leaf(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                  *, fsdp: bool) -> P:
+    for pattern, dims in RULES:
+        if re.search(pattern, path):
+            n = len(dims)
+            lead = len(shape) - n
+            if lead < 0:
+                break
+            axes = [None] * lead
+            for d, logical in enumerate(dims):
+                concrete = logical_to_mesh(mesh, logical, fsdp=fsdp)
+                size = _axis_size(mesh, concrete)
+                if concrete is not None and shape[lead + d] % size == 0 and size > 1:
+                    axes.append(concrete)
+                else:
+                    axes.append(None)
+            return P(*axes)
+    return P()  # replicate
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool = True):
+    """PartitionSpec tree mirroring ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_leaf(_path_str(path), leaf.shape, mesh,
+                                         fsdp=fsdp),
+        params)
+
+
+def param_shardings(params, mesh: Mesh, *, fsdp: bool = True):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(params, mesh, fsdp=fsdp))
+
+
+def batch_axes(mesh: Mesh, size: int):
+    """Largest prefix of (pod, data) whose product divides ``size``."""
+    axes = []
+    prod = 1
+    for name in ("pod", "data"):
+        if name in mesh.axis_names and size % (prod * mesh.shape[name]) == 0:
+            axes.append(name)
+            prod *= mesh.shape[name]
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def cache_spec(mesh: Mesh, batch: int, *, n_kv: int, seq_shard: bool) -> P:
+    """Spec for KV cache leaves (np, b, S, kv, hd)."""
+    b_ax = batch_axes(mesh, batch)
+    if seq_shard:
+        return P(None, b_ax, "model", None, None)
+    kv_ax = "model" if n_kv % mesh.shape["model"] == 0 else None
+    return P(None, b_ax, None, kv_ax, None)

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import RooflineReport, analyze, model_flops  # noqa: F401
+from repro.roofline.hlo import collective_bytes  # noqa: F401

@@ -1,0 +1,156 @@
+"""Analytic arithmetic-intensity / roofline model — paper §5.4, Fig. 4,
+App. B.4 reproduction.
+
+Per-decoding-step FLOPs and HBM traffic for three inference regimes:
+
+- AR:         1 token/step, weights + KV-cache traffic dominate -> AI ~ 1
+              at bs=1, scaling ~linearly with batch until KV traffic binds.
+- vanilla DLM: recomputes the full (L_p + L_g) sequence with bidirectional
+              attention every step, no cache -> compute-bound at bs=1.
+- block-wise DLM (CDLM): B tokens/step against cached prefix -> AI ~ B at
+              bs=1, crossing the ridge at small batch.
+
+The accounting follows the paper's references (Tiwari et al. 2025; Kim et
+al. 2025): matmul FLOPs = 2·m·n·k; every GEMM reads A and W and writes C;
+attention reads/writes scores and the KV stream; norm/activation traffic is
+counted as reads+writes of the hidden state. Paper targets (A100, LLaMA-3.1
+-8B AR / LLaDA-8B DLM, L_p=512, L_g=256): AR bs=1 AI≈1.0, bs∈{2,4,8} ->
+{2.0, 4.0, 7.8}; vanilla bs=1 AI≈438.9; block-wise bs=1 AI≈{4.0, 15.8,
+31.1} for B∈{4,16,32}; ridge 153.0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import A100, HardwareConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class AIModelConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    dtype_bytes: int = 2
+    gated_ffn: bool = True
+
+
+LLAMA31_8B = AIModelConfig(n_layers=32, d_model=4096, n_heads=32,
+                           n_kv_heads=8, d_ff=14336, vocab=128_256)
+LLADA_8B = AIModelConfig(n_layers=32, d_model=4096, n_heads=32,
+                         n_kv_heads=32, d_ff=12288, vocab=126_464)
+
+
+def param_bytes(m: AIModelConfig) -> float:
+    d, hd = m.d_model, m.d_model // m.n_heads
+    per_layer = (d * m.n_heads * hd + 2 * d * m.n_kv_heads * hd
+                 + m.n_heads * hd * d)
+    per_layer += (3 if m.gated_ffn else 2) * d * m.d_ff
+    n = m.n_layers * per_layer + 2 * m.vocab * d
+    return n * m.dtype_bytes
+
+
+def step_cost(m: AIModelConfig, *, q_tokens: int, ctx_tokens: int,
+              batch: int, causal_frac: float = 1.0,
+              kv_cached: bool = True) -> Dict[str, float]:
+    """FLOPs + HBM bytes for one decoding step processing ``q_tokens`` new
+    positions against ``ctx_tokens`` of context per sequence.
+
+    kv_cached=False (vanilla DLM) recomputes K/V for the whole context
+    instead of streaming it from cache (the cost is then inside q_tokens =
+    ctx_tokens and ctx reads count activation traffic, not cache)."""
+    d, hd = m.d_model, m.d_model // m.n_heads
+    nq, nkv = m.n_heads, m.n_kv_heads
+    B = m.dtype_bytes
+    T = q_tokens * batch
+
+    flops = 0.0
+    bytes_ = 0.0
+
+    # --- weights are read once per step (batch-amortized) ---
+    bytes_ += param_bytes(m)
+
+    per_tok_mm_flops = 0.0
+    per_tok_act_bytes = 0.0
+
+    # attention projections
+    qkv_out = nq * hd + 2 * nkv * hd
+    per_tok_mm_flops += 2 * d * qkv_out + 2 * (nq * hd) * d
+    per_tok_act_bytes += (d + qkv_out + nq * hd + d) * B
+    # FFN
+    ff_mats = 3 if m.gated_ffn else 2
+    per_tok_mm_flops += ff_mats * 2 * d * m.d_ff
+    per_tok_act_bytes += (d + ff_mats * m.d_ff + d) * B
+    # norms + residuals (reads + writes of hidden state, ~6 passes)
+    per_tok_act_bytes += 6 * d * B
+
+    flops += m.n_layers * per_tok_mm_flops * T
+    bytes_ += m.n_layers * per_tok_act_bytes * T
+
+    # attention score/value math: q_tokens × ctx_tokens
+    attn_ctx = ctx_tokens * causal_frac
+    flops += m.n_layers * batch * (2 * q_tokens * attn_ctx * nq * hd) * 2
+    # scores traffic (write + read of p), fp16
+    bytes_ += m.n_layers * batch * (q_tokens * attn_ctx * nq) * B * 2
+
+    # KV stream
+    kv_bytes_per_tok = 2 * nkv * hd * B
+    if kv_cached:
+        bytes_ += m.n_layers * batch * ctx_tokens * kv_bytes_per_tok  # read
+        bytes_ += m.n_layers * batch * q_tokens * kv_bytes_per_tok    # write
+    # (vanilla recompute: K/V activations already counted above)
+
+    # lm head on the q tokens
+    flops += 2 * d * m.vocab * T
+    bytes_ += (m.vocab * d) * B + T * m.vocab * B
+
+    return {"flops": flops, "bytes": bytes_, "ai": flops / bytes_}
+
+
+def ar_ai(m: AIModelConfig, batch: int, L_p=512, L_g=256) -> float:
+    ctx = L_p + L_g // 2  # average context during generation
+    return step_cost(m, q_tokens=1, ctx_tokens=ctx, batch=batch,
+                     causal_frac=1.0, kv_cached=True)["ai"]
+
+
+def vanilla_dlm_ai(m: AIModelConfig, batch: int, L_p=512, L_g=256) -> float:
+    L = L_p + L_g
+    return step_cost(m, q_tokens=L, ctx_tokens=L, batch=batch,
+                     causal_frac=1.0, kv_cached=False)["ai"]
+
+
+def blockwise_dlm_ai(m: AIModelConfig, batch: int, block: int,
+                     L_p=512, L_g=256) -> float:
+    ctx = L_p + L_g // 2
+    return step_cost(m, q_tokens=block, ctx_tokens=ctx, batch=batch,
+                     causal_frac=1.0, kv_cached=True)["ai"]
+
+
+def attainable_tflops(ai: float, hw: HardwareConfig = A100) -> float:
+    return min(hw.peak_flops, ai * hw.hbm_bw) / 1e12
+
+
+PAPER_TARGETS = {
+    ("ar", 1): 1.0, ("ar", 2): 2.0, ("ar", 4): 4.0, ("ar", 8): 7.8,
+    ("ar", 128): 71.3,
+    ("vanilla", 1): 438.9,
+    ("block4", 1): 4.0, ("block16", 1): 15.8, ("block32", 1): 31.1,
+}
+
+
+def paper_table(batches=(1, 2, 4, 8, 16, 32, 64, 128)):
+    """The Fig. 4 sweep with the paper's configurations."""
+    rows = []
+    for bs in batches:
+        rows.append({
+            "batch": bs,
+            "ar": ar_ai(LLAMA31_8B, bs),
+            "vanilla": vanilla_dlm_ai(LLADA_8B, bs),
+            "block4": blockwise_dlm_ai(LLADA_8B, bs, 4),
+            "block16": blockwise_dlm_ai(LLADA_8B, bs, 16),
+            "block32": blockwise_dlm_ai(LLADA_8B, bs, 32),
+        })
+    return rows

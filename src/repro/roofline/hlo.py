@@ -1,0 +1,71 @@
+"""HLO-text analysis: collective-traffic extraction.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+bytes, so we parse the optimized HLO for ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` ops and sum
+their *output* shape sizes (the standard per-chip traffic proxy; for
+all-reduce the wire traffic is ~2× output with ring algorithms — reported
+separately as ``wire_bytes``)."""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[2,1024,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str, top_n: int = 8) -> Dict[str, float]:
+    """Sum output bytes per collective kind. '-done' ops are skipped so
+    async pairs are not double-counted. Also returns the ``top_n`` largest
+    individual collectives (kind, bytes, shape) — the hillclimb entry
+    point."""
+    out = defaultdict(float)
+    count = defaultdict(int)
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        kind = m.group(4)
+        if m.group(1) is not None:  # tuple shape
+            nbytes = sum(_shape_bytes(dt, dims)
+                         for dt, dims in _SHAPE_RE.findall(m.group(1)))
+            shape = m.group(1)[:80]
+        else:
+            nbytes = _shape_bytes(m.group(2), m.group(3))
+            shape = f"{m.group(2)}[{m.group(3)}]"
+        out[kind] += nbytes
+        count[kind] += 1
+        ops.append((nbytes, kind, shape))
+    ops.sort(reverse=True)
+    total = sum(out.values())
+    wire = total + out.get("all-reduce", 0.0)  # ring AR moves ~2x
+    return {"per_kind": dict(out), "counts": dict(count),
+            "total_bytes": total, "wire_bytes": wire,
+            "top_ops": [{"bytes": b, "kind": k, "shape": s}
+                        for b, k, s in ops[:top_n]]}

@@ -1,0 +1,1 @@
+from repro.serving.engine import Engine, Request, Response, efficiency_report  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.training import steps, trainer  # noqa: F401

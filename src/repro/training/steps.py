@@ -1,0 +1,194 @@
+"""Jit-able training step builders.
+
+- ``dlm_pretrain_step``  — Eq. 6 masked-denoising SFT of the bidirectional
+  teacher (how Dream/LLaDA-style DLMs are trained at toy scale).
+- ``cdlm_step``          — Alg. 2: the paper's 3-objective fine-tune of the
+  block-causal student (full-FT or LoRA).
+- ``ar_step``            — next-token loss (RWKV6 / AR baseline training).
+
+Each returns ``(loss, metrics)``-producing closures suitable for
+``jax.value_and_grad`` + the AdamW update, and a convenience ``make_*``
+that wires optimizer and jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CDLMConfig, ModelConfig, TrainConfig
+from repro.core import diffusion as D
+from repro.core import losses as LS
+from repro.core import masks
+from repro.models import forward
+from repro.models import layers as L
+from repro.models import lora as LoRA
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# Teacher pretrain (Eq. 6)
+# ---------------------------------------------------------------------------
+def dlm_pretrain_loss(params, batch, key, *, cfg: ModelConfig,
+                      mode: str = masks.BIDIRECTIONAL, block_size: int = 1,
+                      remat: bool = False, **fwd_kw):
+    """batch: prompt (b, P), answer (b, G), maskable (b, G) bool."""
+    prompt, answer, maskable = batch["prompt"], batch["answer"], batch["maskable"]
+    b, P = prompt.shape
+    k1, k2 = jax.random.split(key)
+    t = jax.random.uniform(k1, (b,), minval=0.05, maxval=1.0)
+    masked_answer, m = D.mask_tokens(k2, answer, t, cfg.mask_token_id, maskable)
+    canvas = jnp.concatenate([prompt, masked_answer], axis=1)
+    out = forward(params, canvas, cfg=cfg, mode=mode, prompt_len=P,
+                  block_size=block_size, remat=remat, **fwd_kw)
+    loss = LS.dlm_loss(out.logits[:, P:], answer, m, t)
+    total = loss + cfg.router_aux_weight * out.aux_loss
+    return total, {"dlm_loss": loss, "aux": out.aux_loss}
+
+
+def make_dlm_pretrain_step(cfg: ModelConfig, tcfg: TrainConfig,
+                           mode: str = masks.BIDIRECTIONAL,
+                           block_size: int = 1):
+    lr_fn = adamw.make_lr_fn(tcfg)
+
+    @jax.jit
+    def step(params, opt_state, batch, key):
+        (loss, metrics), grads = jax.value_and_grad(
+            dlm_pretrain_loss, has_aux=True)(
+                params, batch, key, cfg=cfg, mode=mode, block_size=block_size,
+                remat=tcfg.remat)
+        params, opt_state, om = adamw.update(grads, opt_state, params, tcfg, lr_fn)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# AR training (RWKV6 / AR baseline)
+# ---------------------------------------------------------------------------
+def ar_loss(params, batch, key, *, cfg: ModelConfig, remat: bool = False,
+            **fwd_kw):
+    prompt, answer = batch["prompt"], batch["answer"]
+    b, P = prompt.shape
+    canvas = jnp.concatenate([prompt, answer], axis=1)
+    out = forward(params, canvas[:, :-1], cfg=cfg, mode=masks.CAUSAL,
+                  remat=remat, **fwd_kw)
+    targets = canvas[:, 1:]
+    logp = jax.nn.log_softmax(out.logits.astype(jnp.float32), axis=-1)
+    tok = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    # train on the answer span only (SFT)
+    w = jnp.concatenate([jnp.zeros((b, P - 1)), batch["maskable"].astype(jnp.float32)],
+                        axis=1)
+    loss = -jnp.sum(tok * w) / jnp.maximum(w.sum(), 1.0)
+    total = loss + cfg.router_aux_weight * out.aux_loss
+    return total, {"ar_loss": loss, "aux": out.aux_loss}
+
+
+def make_ar_step(cfg: ModelConfig, tcfg: TrainConfig):
+    lr_fn = adamw.make_lr_fn(tcfg)
+
+    @jax.jit
+    def step(params, opt_state, batch, key):
+        (loss, metrics), grads = jax.value_and_grad(ar_loss, has_aux=True)(
+            params, batch, key, cfg=cfg, remat=tcfg.remat)
+        params, opt_state, om = adamw.update(grads, opt_state, params, tcfg, lr_fn)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# CDLM (Alg. 2) — the paper's objective
+# ---------------------------------------------------------------------------
+def cdlm_loss(trainable, static_params, batch, key, *, cfg: ModelConfig,
+              cdlm: CDLMConfig, teacher_head, use_lora: bool,
+              lora_rank: int = 32, lora_alpha: float = 32.0,
+              remat: bool = False, student_mode: str = masks.BLOCK_CAUSAL,
+              extras=None, efficient_loss: bool = False, **fwd_kw):
+    """Eq. 7 total objective.
+
+    trainable: LoRA tree (if use_lora) or the full student params.
+    static_params: base weights when LoRA is used (ignored otherwise).
+    teacher_head: frozen teacher embed/head params for reconstructing
+    teacher distributions from the stored hidden buffer (App. A.1).
+    batch: output of ``trajectory.sample_training_pair`` plus
+    "t"/"dlm_key" handled internally.
+    """
+    if use_lora:
+        params = LoRA.merge(static_params, trainable, lora_alpha, lora_rank)
+    else:
+        params = trainable
+
+    extras = extras or {}
+    off = (extras["prefix_embeds"].shape[1]
+           if "prefix_embeds" in extras else 0)
+    P = batch["prompt"].shape[1]
+    B = cdlm.block_size
+    kw = dict(cfg=cfg, mode=student_mode, prompt_len=off + P, block_size=B,
+              remat=remat, **extras, **fwd_kw)
+    if efficient_loss:
+        # §Perf iteration: lm_head over the generation span only — the three
+        # objectives never read prompt logits (exact, halves (b, L, V)).
+        G = batch["y"].shape[1] - P
+        kw["logits_slice"] = (off + P, off + P + G)
+
+    # (i) student at y
+    out_y = forward(params, batch["y"], **kw)
+    # (ii) student at y* — the stop-gradient consistency target q_{phi^-}
+    out_ystar = forward(params, batch["y_star"], **kw)
+
+    if efficient_loss:
+        logits_y, logits_ystar = out_y.logits, out_ystar.logits
+    else:
+        logits_y = out_y.logits[:, off + P:]
+        logits_ystar = out_ystar.logits[:, off + P:]
+    u_mask = batch["u_mask"][:, P:]
+    s_mask = batch["s_mask"][:, P:]
+
+    # teacher distributions from the hidden buffer through the frozen head
+    teacher_logits = L.lm_head(teacher_head, batch["teacher_hidden"], cfg)
+
+    l_distill = LS.distillation_loss(logits_y, teacher_logits, u_mask,
+                                     cdlm.kl_direction)
+    l_cons = LS.consistency_loss(logits_y, logits_ystar, s_mask,
+                                 cdlm.kl_direction)
+
+    # (iii) DLM loss on ground-truth text
+    k1, k2 = jax.random.split(key)
+    b = batch["gt"].shape[0]
+    t = jax.random.uniform(k1, (b,), minval=0.05, maxval=1.0)
+    masked_gt, m = D.mask_tokens(k2, batch["gt"], t, cfg.mask_token_id,
+                                 batch.get("gt_maskable"))
+    canvas = jnp.concatenate([batch["prompt"], masked_gt], axis=1)
+    out_dlm = forward(params, canvas, **kw)
+    dlm_logits = (out_dlm.logits if efficient_loss
+                  else out_dlm.logits[:, off + P:])
+    l_dlm = LS.dlm_loss(dlm_logits, batch["gt"], m, t)
+
+    total = LS.cdlm_total(l_distill, l_cons, l_dlm, w_distill=cdlm.w_distill,
+                          w_cons=cdlm.w_cons, w_dlm=cdlm.w_dlm)
+    aux = out_y.aux_loss + out_ystar.aux_loss + out_dlm.aux_loss
+    total = total + cfg.router_aux_weight * aux
+    return total, {"distill": l_distill, "cons": l_cons, "dlm": l_dlm,
+                   "aux": aux}
+
+
+def make_cdlm_step(cfg: ModelConfig, cdlm: CDLMConfig, tcfg: TrainConfig,
+                   student_mode: str = masks.BLOCK_CAUSAL):
+    lr_fn = adamw.make_lr_fn(tcfg)
+
+    @jax.jit
+    def step(trainable, static_params, teacher_head, opt_state, batch, key):
+        (loss, metrics), grads = jax.value_and_grad(cdlm_loss, has_aux=True)(
+            trainable, static_params, batch, key, cfg=cfg, cdlm=cdlm,
+            teacher_head=teacher_head, use_lora=tcfg.use_lora,
+            lora_rank=tcfg.lora_rank, lora_alpha=tcfg.lora_alpha,
+            remat=tcfg.remat, student_mode=student_mode)
+        trainable, opt_state, om = adamw.update(grads, opt_state, trainable,
+                                                tcfg, lr_fn)
+        return trainable, opt_state, {**metrics, **om, "loss": loss}
+
+    return step

@@ -1,0 +1,130 @@
+"""High-level training drivers: teacher pretrain → trajectory collection →
+CDLM student distillation — the full paper pipeline at any scale."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CDLMConfig, ModelConfig, TrainConfig
+from repro.core import masks, trajectory
+from repro.data import Corpus, answer_mask
+from repro.models import init_model
+from repro.models import lora as LoRA
+from repro.optim import adamw
+from repro.training import steps as S
+
+
+def _log(step, metrics, every=50, t0=None):
+    if step % every == 0:
+        ms = {k: float(v) for k, v in metrics.items()}
+        extra = f" ({time.time()-t0:.0f}s)" if t0 else ""
+        print(f"  step {step:5d}  " +
+              "  ".join(f"{k}={v:.4f}" for k, v in sorted(ms.items())) + extra)
+
+
+def train_teacher(cfg: ModelConfig, corpus: Corpus, tcfg: TrainConfig,
+                  *, mode: str = masks.BIDIRECTIONAL, block_size: int = 1,
+                  seed: int = 0, verbose: bool = True):
+    """Masked-denoising SFT of the teacher DLM (or block-causal student-form
+    for causal-state backbones like Jamba, per DESIGN.md §5)."""
+    key = jax.random.PRNGKey(seed)
+    params = init_model(key, cfg)
+    opt = adamw.init(params)
+    step_fn = S.make_dlm_pretrain_step(cfg, tcfg, mode=mode,
+                                       block_size=block_size)
+    t0 = time.time()
+    it = corpus.batches(tcfg.batch_size, seed=seed, epochs=10_000)
+    for i in range(tcfg.steps):
+        batch = next(it)
+        jbatch = {"prompt": jnp.asarray(batch["prompt"]),
+                  "answer": jnp.asarray(batch["answer"]),
+                  "maskable": jnp.asarray(answer_mask(batch["answer"]))}
+        key, sub = jax.random.split(key)
+        params, opt, metrics = step_fn(params, opt, jbatch, sub)
+        if verbose:
+            _log(i, metrics, t0=t0)
+    return params
+
+
+def train_ar(cfg: ModelConfig, corpus: Corpus, tcfg: TrainConfig,
+             *, seed: int = 0, verbose: bool = True):
+    key = jax.random.PRNGKey(seed)
+    params = init_model(key, cfg)
+    opt = adamw.init(params)
+    step_fn = S.make_ar_step(cfg, tcfg)
+    t0 = time.time()
+    it = corpus.batches(tcfg.batch_size, seed=seed, epochs=10_000)
+    for i in range(tcfg.steps):
+        batch = next(it)
+        jbatch = {"prompt": jnp.asarray(batch["prompt"]),
+                  "answer": jnp.asarray(batch["answer"]),
+                  "maskable": jnp.asarray(answer_mask(batch["answer"]))}
+        key, sub = jax.random.split(key)
+        params, opt, metrics = step_fn(params, opt, jbatch, sub)
+        if verbose:
+            _log(i, metrics, t0=t0)
+    return params
+
+
+def collect_dataset(teacher_params, cfg: ModelConfig, cdlm: CDLMConfig,
+                    corpus: Corpus, *, n_examples: int, batch: int = 16,
+                    seed: int = 0, extras=None, verbose: bool = True):
+    """Alg. 1 over the corpus (jitted per batch)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    collect_jit = jax.jit(
+        lambda p, pr, gt, k: trajectory.collect(p, pr, gt, cfg=cfg, cdlm=cdlm,
+                                                key=k, extras=extras))
+    done = 0
+    for b in corpus.batches(batch, seed=seed, epochs=100):
+        if done >= n_examples:
+            break
+        key, sub = jax.random.split(key)
+        out = collect_jit(teacher_params, jnp.asarray(b["prompt"]),
+                          jnp.asarray(b["answer"]), sub)
+        chunks.append(jax.device_get(out))
+        done += batch
+        if verbose and done % (batch * 4) == 0:
+            print(f"  collected {done}/{n_examples} prompts "
+                  f"(x{len(cdlm.temperatures)} temps)")
+    return {k: jnp.concatenate([np.asarray(c[k]) for c in chunks], axis=0)
+            for k in chunks[0]}
+
+
+def train_student(teacher_params, dataset, cfg: ModelConfig,
+                  cdlm: CDLMConfig, tcfg: TrainConfig, *, seed: int = 0,
+                  student_mode: str = masks.BLOCK_CAUSAL,
+                  verbose: bool = True):
+    """Alg. 2. Student initialized from teacher weights (paper §4.1);
+    optionally LoRA. Returns merged student params."""
+    key = jax.random.PRNGKey(seed + 1)
+    teacher_head = jax.tree_util.tree_map(jnp.copy, teacher_params["embed"])
+
+    if tcfg.use_lora:
+        trainable = LoRA.init_lora(key, teacher_params, rank=tcfg.lora_rank)
+        static = teacher_params
+    else:
+        trainable = jax.tree_util.tree_map(jnp.copy, teacher_params)
+        static = jax.tree_util.tree_map(lambda x: x, teacher_params)  # unused
+
+    opt = adamw.init(trainable)
+    step_fn = S.make_cdlm_step(cfg, cdlm, tcfg, student_mode=student_mode)
+    sample_jit = jax.jit(lambda k: trajectory.sample_training_pair(
+        dataset, k, tcfg.batch_size, cfg=cfg, cdlm=cdlm))
+
+    t0 = time.time()
+    for i in range(tcfg.steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        batch = sample_jit(k1)
+        trainable, opt, metrics = step_fn(trainable, static, teacher_head,
+                                          opt, batch, k2)
+        if verbose:
+            _log(i, metrics, t0=t0)
+
+    if tcfg.use_lora:
+        return LoRA.merge(static, trainable, tcfg.lora_alpha, tcfg.lora_rank)
+    return trainable

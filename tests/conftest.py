@@ -1,0 +1,16 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the dry-run subprocesses set
+# their own XLA_FLAGS); keep x64 off and make failures deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

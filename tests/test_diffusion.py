@@ -1,0 +1,70 @@
+"""Masked-diffusion process invariants (paper §3, Eq. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import diffusion as D
+
+MASK = 99
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.0, 1.0), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_mask_tokens_rate_and_preservation(t, L, seed):
+    key = jax.random.PRNGKey(seed)
+    tokens = jnp.arange(L) % 50
+    masked, m = D.mask_tokens(key, tokens[None], t, MASK)
+    masked, m = masked[0], m[0]
+    # unmasked positions keep their token
+    assert bool((jnp.where(m, MASK, tokens) == masked).all())
+    # masked positions become MASK
+    assert bool((masked[np.asarray(m)] == MASK).all())
+
+
+def test_mask_tokens_respects_maskable():
+    key = jax.random.PRNGKey(0)
+    tokens = jnp.arange(32)[None]
+    maskable = (jnp.arange(32) < 16)[None]
+    masked, m = D.mask_tokens(key, tokens, 1.0, MASK, maskable)
+    assert bool((masked[0, 16:] == tokens[0, 16:]).all())
+    assert bool(m[0, :16].all())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.05, 0.95), st.floats(0.0, 1.0))
+def test_transition_probs_normalize(t, frac):
+    s = t * frac * 0.99
+    p_unmask = jax.nn.softmax(jnp.arange(5.0))
+    tr = D.transition_probs(t, s, True, p_unmask)
+    total = tr["keep"] + tr["still_masked"] + float(tr["unmask"].sum())
+    assert abs(total - 1.0) < 1e-5
+    tr2 = D.transition_probs(t, s, False, p_unmask)
+    assert tr2["keep"] == 1.0 and tr2["still_masked"] == 0.0
+
+
+def test_timestep_endpoints():
+    assert D.timestep(0, 10) == 1.0 and D.timestep(10, 10) == 0.0
+
+
+def test_confidence_masks_out_unmasked():
+    logits = jnp.zeros((1, 4, 8)).at[0, 0, 3].set(5.0)
+    tokens = jnp.asarray([[MASK % 8, 1, MASK % 8, 2]])
+    cand, conf = D.confidence_and_candidates(logits, tokens, MASK % 8)
+    assert bool(jnp.isinf(conf[0, 1])) and conf[0, 1] < 0
+    assert bool(jnp.isfinite(conf[0, 0]))
+    assert int(cand[0, 0]) == 3
+
+
+def test_select_threshold_always_selects_one():
+    conf = jnp.asarray([[0.1, 0.2, 0.15, -jnp.inf]])
+    block = jnp.asarray([[True, True, True, True]])
+    sel = D.select_threshold_in_block(conf, block, tau=0.9)
+    assert int(sel.sum()) == 1 and bool(sel[0, 1])
+
+
+def test_select_topk_empty_block():
+    conf = jnp.full((1, 4), -jnp.inf)
+    sel = D.select_topk_in_block(conf, jnp.ones((1, 4), bool), 1)
+    assert int(sel.sum()) == 0

@@ -1,0 +1,121 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Sweeps shapes and dtypes per the brief; hypothesis drives the geometry of
+the block-causal mask for the attention kernel.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.block_attn import block_attention_ref, flash_block_attention
+from repro.kernels.decode_attn import decode_attention, decode_attention_ref
+from repro.kernels.xent import fused_xent, xent_ref
+
+
+def _gqa_ref(q, k, v, **kw):
+    b, L, Kv, G, hd = q.shape
+    qr = q.transpose(0, 2, 3, 1, 4).reshape(b, Kv * G, L, hd)
+    kr = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1)
+    vr = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1)
+    ref = block_attention_ref(qr, kr, vr, **kw)
+    return ref.reshape(b, Kv, G, L, hd).transpose(0, 3, 1, 2, 4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("L,mode,P,B,win,cap", [
+    (128, "block_causal", 32, 16, None, None),
+    (200, "block_causal", 40, 8, None, None),
+    (256, "causal", 0, 1, None, None),
+    (160, "bidirectional", 0, 1, None, None),
+    (256, "block_causal", 64, 32, 64, 50.0),
+    (192, "causal", 0, 1, 96, None),
+])
+def test_block_attn_vs_oracle(L, mode, P, B, win, cap, dtype):
+    key = jax.random.PRNGKey(0)
+    b, Kv, G, hd = 2, 2, 3, 64
+    q = jax.random.normal(key, (b, L, Kv, G, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, L, Kv, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, L, Kv, hd)).astype(dtype)
+    out = flash_block_attention(q, k, v, mode=mode, prompt_len=P,
+                                block_size=B, window=win, scale=0.125,
+                                softcap=cap)
+    ref = _gqa_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                   v.astype(jnp.float32), mode=mode, prompt_len=P,
+                   block_size=B, window=win, scale=0.125, softcap=cap)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(out - ref))) < tol
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 3))
+def test_block_attn_property_geometry(nb, bs_pow, p_quarter):
+    B = 2 ** bs_pow
+    P = p_quarter * 16
+    L = P + nb * B * 4
+    key = jax.random.PRNGKey(L)
+    q = jax.random.normal(key, (1, L, 1, 2, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, L, 1, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, L, 1, 32))
+    out = flash_block_attention(q, k, v, mode="block_causal", prompt_len=P,
+                                block_size=B * 4, scale=0.2)
+    ref = _gqa_ref(q, k, v, mode="block_causal", prompt_len=P,
+                   block_size=B * 4, scale=0.2)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,Bq,Kv,G,clen,win", [
+    (256, 32, 2, 4, 200, None),
+    (256, 32, 2, 4, 0, None),
+    (512, 16, 1, 8, 300, 128),
+    (128, 8, 4, 1, 128, None),
+    (384, 32, 2, 2, 37, None),
+])
+def test_decode_attn_vs_oracle(S, Bq, Kv, G, clen, win, dtype):
+    b, hd = 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (b, Bq, Kv, G, hd)).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, S, Kv, hd)).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, S, Kv, hd)).astype(dtype)
+    kb = jax.random.normal(ks[3], (b, Bq, Kv, hd)).astype(dtype)
+    vb = jax.random.normal(ks[4], (b, Bq, Kv, hd)).astype(dtype)
+    out = decode_attention(q, kc, vc, kb, vb, jnp.asarray(clen),
+                           scale=0.125, window=win)
+    ref = decode_attention_ref(
+        q.astype(jnp.float32), kc.astype(jnp.float32),
+        vc.astype(jnp.float32), kb.astype(jnp.float32),
+        vb.astype(jnp.float32), clen, scale=0.125, window=win)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(out - ref))) < tol
+
+
+@pytest.mark.parametrize("T,d,V", [(128, 64, 512), (200, 32, 1000),
+                                   (64, 128, 593), (96, 48, 2048)])
+def test_xent_vs_oracle(T, d, V):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = jax.random.normal(ks[0], (T, d)) * 0.5
+    w = jax.random.normal(ks[1], (d, V)) * 0.1
+    y = jax.random.randint(ks[2], (T,), 0, V)
+    assert float(jnp.max(jnp.abs(fused_xent(h, w, y) - xent_ref(h, w, y)))) < 1e-4
+
+
+def test_xent_grads_vs_oracle():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = jax.random.normal(ks[0], (64, 32)) * 0.5
+    w = jax.random.normal(ks[1], (32, 640)) * 0.1
+    y = jax.random.randint(ks[2], (64,), 0, 640)
+    g1 = jax.grad(lambda h, w: fused_xent(h, w, y).mean(), (0, 1))(h, w)
+    g2 = jax.grad(lambda h, w: xent_ref(h, w, y).mean(), (0, 1))(h, w)
+    for a, b in zip(g1, g2):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-5
+
+
+def test_xent_bf16_inputs():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = (jax.random.normal(ks[0], (128, 64)) * 0.5).astype(jnp.bfloat16)
+    w = (jax.random.normal(ks[1], (64, 512)) * 0.1).astype(jnp.bfloat16)
+    y = jax.random.randint(ks[2], (128,), 0, 512)
+    got = fused_xent(h, w, y)
+    ref = xent_ref(h.astype(jnp.float32), w.astype(jnp.float32), y)
+    assert float(jnp.max(jnp.abs(got - ref))) < 5e-2

@@ -1,0 +1,77 @@
+"""Property tests for the attention-visibility builders (paper Fig. 2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks
+
+
+@st.composite
+def mask_geometry(draw):
+    block = draw(st.integers(1, 8))
+    n_blocks = draw(st.integers(1, 6))
+    prompt = draw(st.integers(0, 12))
+    return prompt, block, prompt + block * n_blocks
+
+
+@settings(max_examples=50, deadline=None)
+@given(mask_geometry())
+def test_block_causal_properties(geom):
+    prompt, B, total = geom
+    vis = np.asarray(masks.visible(
+        np.arange(total), np.arange(total), mode=masks.BLOCK_CAUSAL,
+        prompt_len=prompt, block_size=B))
+    blk = np.asarray(masks.block_index(np.arange(total), prompt, B))
+    for qi in range(total):
+        for ki in range(total):
+            assert vis[qi, ki] == (blk[ki] <= blk[qi])
+    # prompt is fully bidirectional within itself
+    if prompt:
+        assert vis[:prompt, :prompt].all()
+    # every position sees the prompt
+    if prompt:
+        assert vis[:, :prompt].all()
+    # within-block bidirectionality
+    for b in range((total - prompt) // B):
+        s = prompt + b * B
+        assert vis[s:s + B, s:s + B].all()
+    # no peeking at future blocks
+    for qi in range(prompt, total):
+        qb = blk[qi]
+        nxt = prompt + (qb + 1) * B
+        if nxt < total:
+            assert not vis[qi, nxt:].any()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 16))
+def test_causal_window(total, window):
+    vis = np.asarray(masks.visible(np.arange(total), np.arange(total),
+                                   mode=masks.CAUSAL, window=window))
+    q, k = np.meshgrid(np.arange(total), np.arange(total), indexing="ij")
+    expect = (k <= q) & (q - k < window)
+    assert (vis == expect).all()
+
+
+def test_block_causal_is_between_causal_and_bidirectional():
+    total, prompt, B = 40, 8, 4
+    pos = np.arange(total)
+    bc = np.asarray(masks.visible(pos, pos, mode=masks.BLOCK_CAUSAL,
+                                  prompt_len=prompt, block_size=B))
+    ca = np.asarray(masks.visible(pos, pos, mode=masks.CAUSAL))
+    bi = np.asarray(masks.visible(pos, pos, mode=masks.BIDIRECTIONAL))
+    assert (ca <= bc).all() and (bc <= bi).all()
+    assert bc.sum() > ca.sum() and bc.sum() < bi.sum()
+
+
+def test_bias_values():
+    bias = masks.full_bias(6, mode=masks.CAUSAL)
+    assert float(bias[3, 2]) == 0.0
+    assert float(bias[2, 3]) < -1e29
+
+
+def test_bias_fn_kv_valid():
+    f = masks.make_bias_fn(mode=masks.BIDIRECTIONAL, kv_valid_len=3)
+    b = np.asarray(f(np.arange(2), np.arange(5)))
+    assert (b[:, :3] == 0).all() and (b[:, 3:] == masks.NEG_INF).all()

@@ -1,0 +1,107 @@
+"""Optimizer math, LoRA equivalence, checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config
+from repro.models import forward, init_model
+from repro.models import lora as LoRA
+from repro.optim import adamw
+
+
+def test_adamw_matches_reference_math():
+    tcfg = TrainConfig(learning_rate=0.1, warmup_frac=0.0, grad_clip=1e9,
+                       weight_decay=0.0, steps=10)
+    params = {"w": jnp.asarray([1.0, 2.0])}
+    grads = {"w": jnp.asarray([0.1, -0.2])}
+    st = adamw.init(params)
+    new, st2, m = adamw.update(grads, st, params, tcfg)
+    # step 1: mhat = g, vhat = g^2 -> delta = g/(|g|+eps) = sign(g)
+    want = params["w"] - 0.1 * jnp.sign(grads["w"])
+    assert float(jnp.max(jnp.abs(new["w"] - want))) < 1e-4
+    assert int(st2.step) == 1
+
+
+def test_grad_clip():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+
+def test_weight_decay_mask():
+    tcfg = TrainConfig(learning_rate=0.1, warmup_frac=0.0, weight_decay=1.0,
+                       steps=10)
+    params = {"mlp": {"wi_gate": jnp.ones((2, 2))},
+              "norm1": {"w": jnp.ones((2,))}}
+    grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    st = adamw.init(params)
+    new, _, _ = adamw.update(grads, st, params, tcfg)
+    # decayed matrix moves, norm scale does not
+    assert float(jnp.abs(new["mlp"]["wi_gate"] - 1.0).max()) > 1e-3
+    assert float(jnp.abs(new["norm1"]["w"] - 1.0).max()) < 1e-6
+
+
+def test_lora_zero_b_is_identity():
+    cfg = get_config("qwen2-0.5b").reduced(dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    lora = LoRA.init_lora(jax.random.PRNGKey(1), params, rank=4)
+    merged = LoRA.merge(params, lora, alpha=8.0, rank=4)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0,
+                                cfg.vocab_size)
+    o1 = forward(params, tokens, cfg=cfg)
+    o2 = forward(merged, tokens, cfg=cfg)
+    assert float(jnp.max(jnp.abs(o1.logits - o2.logits))) < 1e-5
+
+
+def test_lora_merge_equals_factored():
+    cfg = get_config("qwen2-0.5b").reduced(dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    lora = LoRA.init_lora(jax.random.PRNGKey(1), params, rank=4)
+    # random B
+    lora = jax.tree_util.tree_map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(3), x.shape) * 0.01,
+        lora)
+    merged = LoRA.merge(params, lora, alpha=8.0, rank=4)
+    flat_m = jax.tree_util.tree_flatten_with_path(merged)[0]
+    flat_p = dict((LoRA._path_str(p), l)
+                  for p, l in jax.tree_util.tree_flatten_with_path(params)[0])
+    changed = 0
+    for path, leaf in flat_m:
+        name = LoRA._path_str(path)
+        base = flat_p[name]
+        if name in lora:
+            ab = jnp.einsum("...ir,...ro->...io", lora[name]["a"],
+                            lora[name]["b"]) * 2.0
+            assert float(jnp.max(jnp.abs(leaf - (base + ab)))) < 1e-5
+            changed += 1
+        else:
+            assert (leaf == base).all()
+    assert changed >= 6  # q,k,v,o + mlp targets exist
+
+
+def test_lora_targets_attention_and_mlp():
+    cfg = get_config("qwen2-0.5b").reduced(dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    lora = LoRA.init_lora(jax.random.PRNGKey(1), params, rank=4)
+    names = set(n.split("/")[-1] for n in lora)
+    assert {"wq", "wk", "wv", "wo", "wi_gate", "wi_up"} <= names
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("qwen2-0.5b").reduced(dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save(params, path)
+    template = jax.tree_util.tree_map(jnp.zeros_like, params)
+    back = restore(template, path)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        assert float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32)))) == 0.0

@@ -1,0 +1,111 @@
+"""Decoding-algorithm behavior (paper §4.3 + baselines)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.sampler import (
+    SAMPLERS,
+    SamplerSpec,
+    cdlm,
+    fast_dllm_parallel,
+    vanilla_blockwise,
+)
+from repro.models import init_model
+
+CFG = get_config("qwen2-0.5b").reduced(dtype="float32")
+P, G, B = 8, 16, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, P), 2,
+                                 CFG.vocab_size)
+    return params, prompts
+
+
+@pytest.mark.parametrize("name", sorted(SAMPLERS))
+def test_sampler_completes_generation(setup, name):
+    params, prompts = setup
+    spec = SamplerSpec(prompt_len=P, gen_len=G, block_size=B,
+                       conf_threshold=0.5, early_stop=False)
+    res = SAMPLERS[name](params, prompts, cfg=CFG, spec=spec)
+    toks = np.asarray(res.tokens)
+    assert toks.shape == (2, P + G)
+    assert (toks[:, :P] == np.asarray(prompts)).all()
+    if name != "ar":  # AR writes real tokens, may legitimately emit mask id
+        assert (toks[:, P:] != CFG.mask_token_id).all(), name
+    assert int(res.steps.max()) <= G
+
+
+def test_vanilla_steps_equal_gen_len(setup):
+    params, prompts = setup
+    spec = SamplerSpec(prompt_len=P, gen_len=G, block_size=B)
+    res = vanilla_blockwise(params, prompts, cfg=CFG, spec=spec)
+    assert (np.asarray(res.steps) == G).all()
+
+
+def test_threshold_zero_is_one_step_per_block(setup):
+    """tau=0 finalizes the whole block at once -> n_blocks steps."""
+    params, prompts = setup
+    spec = SamplerSpec(prompt_len=P, gen_len=G, block_size=B,
+                       conf_threshold=0.0, early_stop=False)
+    res = fast_dllm_parallel(params, prompts, cfg=CFG, spec=spec)
+    assert (np.asarray(res.steps) == G // B).all()
+
+
+def test_threshold_monotonicity(setup):
+    """Lower tau => fewer (or equal) refinement steps (App. B.2 trend)."""
+    params, prompts = setup
+    steps = []
+    for tau in (0.0, 0.5, 0.999):
+        spec = SamplerSpec(prompt_len=P, gen_len=G, block_size=B,
+                           conf_threshold=tau, early_stop=False)
+        res = cdlm(params, prompts, cfg=CFG, spec=spec)
+        steps.append(int(res.steps.sum()))
+    assert steps[0] <= steps[1] <= steps[2]
+    assert steps[0] == 2 * (G // B)  # tau=0: one step per block per seq
+
+
+def test_trajectory_recording(setup):
+    params, prompts = setup
+    spec = SamplerSpec(prompt_len=P, gen_len=G, block_size=B)
+    res, finalized_at, hidden = vanilla_blockwise(
+        params, prompts, cfg=CFG, spec=spec, record_hidden=True)
+    fat = np.asarray(finalized_at)
+    # every generated position finalized exactly once, steps 0..G-1 used once
+    assert (np.sort(fat, axis=1) == np.arange(G)).all()
+    # block-wise order: earlier blocks finalized at earlier step ranges
+    for blk in range(G // B):
+        sel = fat[:, blk * B:(blk + 1) * B]
+        assert (sel >= blk * B).all() and (sel < (blk + 1) * B).all()
+    assert np.abs(np.asarray(hidden)).sum() > 0
+
+
+def test_cdlm_early_stop_reduces_steps(setup):
+    """Force EOS-heavy logits by biasing the head; early_stop must not
+    increase steps and gen_lengths must shrink."""
+    params, prompts = setup
+    # bias head toward EOS so the first block emits it
+    params2 = jax.tree_util.tree_map(lambda x: x, params)
+    head = params2["embed"]["tok"]
+    params2["embed"]["tok"] = head.at[CFG.eos_token_id].set(head[CFG.eos_token_id] + 3.0)
+    spec_on = SamplerSpec(prompt_len=P, gen_len=G, block_size=B,
+                          conf_threshold=0.0, early_stop=True)
+    spec_off = SamplerSpec(prompt_len=P, gen_len=G, block_size=B,
+                           conf_threshold=0.0, early_stop=False)
+    r_on = cdlm(params2, prompts, cfg=CFG, spec=spec_on)
+    r_off = cdlm(params2, prompts, cfg=CFG, spec=spec_off)
+    assert int(r_on.steps.sum()) <= int(r_off.steps.sum())
+    assert int(r_on.gen_lengths.max()) <= G
+
+
+def test_gen_lengths_eos_semantics():
+    from repro.core.sampler import _gen_lengths
+    spec = SamplerSpec(prompt_len=2, gen_len=4, block_size=2)
+    toks = jnp.asarray([[5, 5, 9, CFG.eos_token_id, 9, 9],
+                        [5, 5, 9, 9, 9, 9]])
+    gl = _gen_lengths(toks, spec, CFG)
+    assert gl.tolist() == [1, 4]

@@ -1,0 +1,81 @@
+"""Trajectory encoding (Alg. 1) and (y, y*) pair construction (Alg. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trajectory as T
+
+MASK = 511
+
+
+def test_state_at_endpoints():
+    final = jnp.asarray([[3, 4, 5, 6]])
+    fat = jnp.asarray([[2, 0, 3, 1]])
+    y0 = T.state_at(final, fat, 0, MASK)
+    yN = T.state_at(final, fat, 4, MASK)
+    assert (np.asarray(y0) == MASK).all()
+    assert (np.asarray(yN) == np.asarray(final)).all()
+
+
+def test_state_at_monotone():
+    final = jnp.arange(8)[None] + 10
+    fat = jnp.asarray([[0, 3, 1, 2, 5, 4, 7, 6]])
+    prev_unmasked = -1
+    for s in range(9):
+        y = np.asarray(T.state_at(final, fat, s, MASK))
+        n = int((y != MASK).sum())
+        assert n == s  # exactly one token revealed per step
+        assert n >= prev_unmasked
+        prev_unmasked = n
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 31), st.integers(1, 3))
+def test_block_completion_step(t_start, bpow):
+    B = 2 ** bpow * 4
+    t_end = T.block_completion_step(t_start, B)
+    assert t_end > t_start
+    assert t_end - t_start <= B
+    assert t_end % B == 0
+
+
+def test_position_sets_partition():
+    fat = jnp.asarray([[0, 1, 2, 3, 4, 5, 6, 7]])
+    u, s = T.position_sets(fat, jnp.asarray([2]), jnp.asarray([4]))
+    u, s = np.asarray(u[0]), np.asarray(s[0])
+    # positions finalized in [2, 4) are U; >= 4 are S; < 2 neither
+    assert u.tolist() == [False, False, True, True, False, False, False, False]
+    assert s.tolist() == [False, False, False, False, True, True, True, True]
+    assert not (u & s).any()
+
+
+def test_sample_training_pair_shapes():
+    from repro.configs.base import CDLMConfig
+    from repro.configs.registry import get_config
+    cfg = get_config("qwen2-0.5b").reduced(dtype="float32")
+    cdlm = CDLMConfig(block_size=4, gen_length=8, prompt_length=8)
+    n, G, P = 6, 8, 8
+    ds = {
+        "prompt": jnp.ones((n, P), jnp.int32),
+        "gt": jnp.ones((n, G), jnp.int32) * 2,
+        "final": jnp.ones((n, G), jnp.int32) * 3,
+        "finalized_at": jnp.tile(jnp.arange(G)[None], (n, 1)),
+        "hidden": jnp.zeros((n, G, cfg.d_model)),
+    }
+    batch = T.sample_training_pair(ds, jax.random.PRNGKey(0), 4, cfg=cfg,
+                                   cdlm=cdlm)
+    assert batch["y"].shape == (4, P + G)
+    assert batch["u_mask"].shape == (4, P + G)
+    # prompt positions never selected
+    assert not bool(batch["u_mask"][:, :P].any())
+    assert not bool(batch["s_mask"][:, :P].any())
+    # y is always at least as masked as y*
+    y_masked = batch["y"] == cfg.mask_token_id
+    ystar_masked = batch["y_star"] == cfg.mask_token_id
+    assert bool((ystar_masked <= y_masked).all())
+    # U positions: masked in y, unmasked in y*
+    u = np.asarray(batch["u_mask"])
+    assert bool((np.asarray(y_masked)[u]).all())
+    assert not bool((np.asarray(ystar_masked)[u]).any())
