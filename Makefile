@@ -1,0 +1,16 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify verify-fast bench
+
+# tier-1 suite (ROADMAP.md): must stay green
+verify:
+	$(PYTHON) -m pytest -x -q
+
+# fast subset: skips the slow toy-scale e2e training pipeline; exercises the
+# hypothesis-optional fallback path when hypothesis is not installed
+verify-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+bench:
+	$(PYTHON) -m benchmarks.run

@@ -1,0 +1,106 @@
+"""Serving-scheduler benchmark: static fixed-shape batching vs continuous
+block-level batching on a Poisson arrival trace with mixed generation
+lengths (per-request ``max_tokens`` caps).
+
+Static batching pads requests into fixed chunks and runs each chunk to
+completion: a lane capped at one block still rides along for the full
+block grid, and a chunk cannot launch until its last request has arrived.
+The continuous engine evicts finished lanes at every block boundary and
+admits queued requests into the freed cache rows mid-flight, so short
+requests release their lanes early and the decode batch stays full.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs.base import ServeConfig
+
+
+def _run_static_trace(eng, reqs, max_batch):
+    """Replay the trace through the static engine: chunks form in arrival
+    order and launch once every member has arrived."""
+    by_id = {r.id: r for r in reqs}
+    lat = {}
+    out = []
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), max_batch):
+        chunk = reqs[i:i + max_batch]
+        ready_at = max(r.arrival_s for r in chunk)
+        now = time.perf_counter() - t0
+        if ready_at > now:
+            time.sleep(ready_at - now)
+        rs = eng.generate(chunk)
+        done = time.perf_counter() - t0
+        for r in rs:
+            lat[r.id] = done - by_id[r.id].arrival_s
+        out.extend(rs)
+    return out, lat, time.perf_counter() - t0
+
+
+def _report(name, resp, lat_by_id, makespan):
+    toks = sum(r.gen_length for r in resp)
+    lats = np.asarray(sorted(lat_by_id.values()))
+    tps = toks / makespan if makespan > 0 else float("inf")
+    print(f"{name:12s} {tps:>9.0f} {makespan*1e3:>10.1f} "
+          f"{np.median(lats)*1e3:>9.1f} {lats[int(0.95*(len(lats)-1))]*1e3:>9.1f} "
+          f"{toks:>7d}")
+    return tps
+
+
+def run(csv_rows=None, n_requests=96, max_batch=4, rate_hz=1000.0):
+    from repro.serving import ContinuousEngine, Engine
+
+    student = common.get_student()
+    reqs = common.poisson_trace(n=n_requests, rate_hz=rate_hz, seed=0)
+    kw = dict(block_size=common.CDLM_CFG.block_size,
+              gen_length=common.TASK.gen_len, sampler="cdlm",
+              conf_threshold=0.9, max_batch=max_batch)
+
+    static_eng = Engine(student, common.CFG,
+                        ServeConfig(scheduler="static", **kw),
+                        prompt_len=common.TASK.prompt_len)
+    cont_eng = ContinuousEngine(student, common.CFG,
+                                ServeConfig(scheduler="continuous", **kw),
+                                prompt_len=common.TASK.prompt_len)
+    static_eng.warmup()
+    cont_eng.warmup()
+
+    print(f"\n== serving schedulers ({n_requests} reqs, Poisson "
+          f"{rate_hz:.0f}/s, batch {max_batch}, mixed max_tokens) ==")
+    print(f"{'scheduler':12s} {'tok/s':>9} {'makespan':>10} {'p50 lat':>9} "
+          f"{'p95 lat':>9} {'tokens':>7}")
+
+    s_resp, s_lat, s_make = _run_static_trace(static_eng, reqs, max_batch)
+    s_tps = _report("static", s_resp, s_lat, s_make)
+
+    t0 = time.perf_counter()
+    c_resp = cont_eng.generate(reqs)
+    c_make = time.perf_counter() - t0
+    c_lat = {r.id: r.latency_s for r in c_resp}
+    c_tps = _report("continuous", c_resp, c_lat, c_make)
+
+    assert len(c_resp) == len(s_resp) == n_requests
+    speedup = c_tps / s_tps if s_tps else float("inf")
+    verdict = "OK" if c_tps >= s_tps else "REGRESSION"
+    print(f"continuous/static throughput: x{speedup:.2f}  [{verdict}]")
+
+    if csv_rows is not None:
+        csv_rows.append(("serving/static_tps", s_make * 1e6 / n_requests,
+                         f"{s_tps:.0f}"))
+        csv_rows.append(("serving/continuous_tps", c_make * 1e6 / n_requests,
+                         f"{c_tps:.0f}"))
+        csv_rows.append(("serving/speedup", 0.0, f"{speedup:.2f}"))
+    return speedup
+
+
+if __name__ == "__main__":
+    run()

@@ -88,6 +88,23 @@ def get_student(teacher=None, dataset=None, *, weights=None, steps=None,
     return student
 
 
+def poisson_trace(n=48, rate_hz=60.0, seed=0, short_frac=0.5):
+    """Serving-bench request trace: Poisson arrivals over the eval split with
+    mixed per-request generation caps (a ``short_frac`` share capped at one
+    block, the rest at the full ``gen_len``)."""
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    ev = corpus().eval_batch(n)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n))
+    B = CDLM_CFG.block_size
+    reqs = []
+    for i in range(n):
+        mt = B if rng.random() < short_frac else TASK.gen_len
+        reqs.append(Request(prompt=ev["prompt"][i], id=i, max_tokens=int(mt),
+                            arrival_s=float(arrivals[i])))
+    return reqs
+
+
 def eval_sampler(params, sampler_fn, *, n=64, conf_threshold=0.9,
                  block_size=None, temperature=0.0, early_stop=False,
                  **extra):

@@ -8,6 +8,7 @@
   bench_block_size            Fig. 8 / App. B.3
   bench_loss_weights          Table 3
   bench_kernels               kernel-layer microbench
+  bench_serving               static vs continuous block-level batching
 
 Run everything:   PYTHONPATH=src python -m benchmarks.run
 One module:       PYTHONPATH=src python -m benchmarks.bench_main_results
@@ -27,13 +28,15 @@ def main() -> None:
         bench_kernels,
         bench_loss_weights,
         bench_main_results,
+        bench_serving,
         bench_step_truncation,
     )
     rows = []
     t0 = time.time()
     for mod in (bench_arithmetic_intensity, bench_kernels,
                 bench_main_results, bench_step_truncation,
-                bench_conf_threshold, bench_block_size, bench_loss_weights):
+                bench_conf_threshold, bench_block_size, bench_loss_weights,
+                bench_serving):
         print(f"\n##### {mod.__name__} ({time.time()-t0:.0f}s elapsed) #####")
         mod.run(csv_rows=rows)
 

@@ -252,6 +252,7 @@ class ServeConfig:
     temperature: float = 0.0
     sampler: str = "cdlm"            # vanilla|fast_dllm|dual_cache|interval_cache|cdlm|ar
     cache_refresh_interval: int = 8  # for interval_cache (dLLM-Cache analog)
+    scheduler: str = "static"        # static | continuous (block-level batching)
 
 
 @dataclass(frozen=True)

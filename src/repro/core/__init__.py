@@ -1,9 +1,12 @@
 """The paper's primary contribution: consistency-distilled block-causal
 diffusion language modeling — masks, diffusion process, 3-objective losses,
-trajectory collection, exact block-wise caches and all samplers.
+trajectory collection, exact block-wise caches (with per-lane reset/commit
+for continuous batching), the unified block-decode engine (``block_loop``)
+and the sampler strategy declarations over it.
 
 NOTE: submodules are imported lazily (``from repro.core import sampler``)
-— ``sampler``/``trajectory`` depend on ``repro.models`` which itself uses
-``repro.core.masks``, so eager package imports here would be circular.
+— ``sampler``/``block_loop``/``trajectory`` depend on ``repro.models``
+which itself uses ``repro.core.masks``, so eager package imports here
+would be circular.
 """
 from repro.core import diffusion, losses, masks  # noqa: F401  (leaf modules)

@@ -1,0 +1,424 @@
+"""Unified block-decode engine (paper §4.3).
+
+Every decoding algorithm in this repo — the teacher operating point, the
+training-free cache baselines, the CDLM student, and the AR baseline — is
+the *same* block-grid loop with three orthogonal knobs, captured by
+:class:`DecodeStrategy`:
+
+- ``attn_mode``:     attention visibility during decode
+  (``bidirectional`` | ``block_causal`` | ``causal``);
+- ``cache_policy``:  what the KV/state cache means
+  (``none``: full recompute every step; ``approx-dual``: stale
+  prefix/suffix KV refreshed at block boundaries; ``approx-interval``:
+  stale KV refreshed every ``spec.cache_refresh_interval`` steps;
+  ``exact-commit``: block-causal exact cache with a commit pass at block
+  completion; ``ar``: token-level causal cache);
+- ``finalize``:      how tokens are finalized inside a block
+  (``top1``: one most-confident token per step; ``threshold``: every
+  position with confidence >= tau, at least one; ``greedy-next``:
+  autoregressive argmax of the next token).
+
+:func:`run_block_loop` executes a strategy over the static block grid and
+is jit-compatible (python loop over blocks, ``lax.while_loop`` within a
+block). The thin declarations in ``repro.core.sampler`` are bit-identical
+to the seed samplers they replaced: same forward-pass sequence, same RNG
+split order, same step/call accounting.
+
+:func:`lane_block_forward` is the per-lane variant of the active-block
+forward: each batch lane decodes *its own* block offset against its own
+cache rows. Block-causal exactness makes lanes fully independent, which is
+the primitive the continuous-batching scheduler in ``repro.serving``
+builds on (evict a finished lane, reset its cache rows, admit a queued
+request mid-flight).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as C
+from repro.core import diffusion as D
+from repro.core import masks
+from repro.models import forward
+
+
+class SampleResult(NamedTuple):
+    tokens: jnp.ndarray         # (b, prompt+gen) canvas
+    steps: jnp.ndarray          # (b,) refinement iterations
+    n_model_calls: jnp.ndarray  # scalar, total forward passes
+    gen_lengths: jnp.ndarray    # (b,) tokens before EOS
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    prompt_len: int             # text prompt tokens in the canvas
+    gen_len: int
+    block_size: int
+    conf_threshold: float = 0.9
+    temperature: float = 0.0
+    early_stop: bool = True
+    cache_refresh_interval: int = 8
+    attn_impl: str = "auto"
+    pos_offset: int = 0         # prefix embeds (VLM patches) before canvas
+
+    @property
+    def n_blocks(self) -> int:
+        return self.gen_len // self.block_size
+
+    @property
+    def full_prompt_len(self) -> int:
+        return self.prompt_len + self.pos_offset
+
+
+CACHE_POLICIES = ("none", "approx-dual", "approx-interval", "exact-commit",
+                  "ar")
+FINALIZE_RULES = ("top1", "threshold", "greedy-next")
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeStrategy:
+    """Declarative description of a decoding algorithm."""
+    name: str
+    attn_mode: str              # masks.BIDIRECTIONAL | BLOCK_CAUSAL | CAUSAL
+    cache_policy: str           # see CACHE_POLICIES
+    finalize: str               # see FINALIZE_RULES
+
+    def __post_init__(self):
+        if self.cache_policy not in CACHE_POLICIES:
+            raise ValueError(f"unknown cache policy {self.cache_policy!r}")
+        if self.finalize not in FINALIZE_RULES:
+            raise ValueError(f"unknown finalize rule {self.finalize!r}")
+
+
+#: The six decoding algorithms of Tables 1–2 as strategy declarations.
+STRATEGIES = {
+    # naive DLM teacher: full bidirectional recompute, top-1 per step
+    "vanilla": DecodeStrategy("vanilla", masks.BIDIRECTIONAL, "none", "top1"),
+    # Fast-dLLM (Parallel): threshold finalization, full recompute
+    "fast_dllm": DecodeStrategy("fast_dllm", masks.BIDIRECTIONAL, "none",
+                                "threshold"),
+    # Fast-dLLM (Par.+D.C.): stale KV refreshed at block boundaries
+    "dual_cache": DecodeStrategy("dual_cache", masks.BIDIRECTIONAL,
+                                 "approx-dual", "threshold"),
+    # dLLM-Cache analog: stale KV refreshed every R steps
+    "interval_cache": DecodeStrategy("interval_cache", masks.BIDIRECTIONAL,
+                                     "approx-interval", "threshold"),
+    # the paper's student: exact block-causal cache + commit pass
+    "cdlm": DecodeStrategy("cdlm", masks.BLOCK_CAUSAL, "exact-commit",
+                           "threshold"),
+    # autoregressive greedy baseline (Fig. 3)
+    "ar": DecodeStrategy("ar", masks.CAUSAL, "ar", "greedy-next"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+def init_canvas(prompt_tokens, spec: SamplerSpec, cfg: ModelConfig):
+    b = prompt_tokens.shape[0]
+    gen = jnp.full((b, spec.gen_len), cfg.mask_token_id, prompt_tokens.dtype)
+    return jnp.concatenate([prompt_tokens, gen], axis=1)
+
+
+def _gen_lengths(tokens, spec: SamplerSpec, cfg: ModelConfig):
+    gen = tokens[:, spec.prompt_len:]
+    is_eos = gen == cfg.eos_token_id
+    has = jnp.any(is_eos, axis=-1)
+    first = jnp.argmax(is_eos, axis=-1)
+    return jnp.where(has, first, spec.gen_len)
+
+
+def _block_pos_mask(T: int, start: int, size: int):
+    pos = jnp.arange(T)
+    return (pos >= start) & (pos < start + size)
+
+
+def _full_logits(params, tokens, cfg, spec, mode, extras):
+    """Full forward over the canvas (+ prefix embeds); returns the model
+    output with logits/hidden sliced back to canvas coordinates."""
+    out = forward(params, tokens, cfg=cfg, mode=mode,
+                  prompt_len=spec.full_prompt_len, block_size=spec.block_size,
+                  attn_impl=spec.attn_impl, **extras)
+    if spec.pos_offset:
+        out = out._replace(logits=out.logits[:, spec.pos_offset:],
+                           hidden=out.hidden[:, spec.pos_offset:])
+    return out
+
+
+def _dec_extras(extras):
+    return {k: v for k, v in extras.items()
+            if k not in ("encoder_embeds", "prefix_embeds")}
+
+
+def _threshold_update(tokens, logits_canvas, bmask, spec, cfg, key, active):
+    cand, conf = D.confidence_and_candidates(
+        logits_canvas, tokens, cfg.mask_token_id, spec.temperature, key)
+    sel = D.select_threshold_in_block(conf, bmask[None, :], spec.conf_threshold)
+    sel = sel & active[:, None]
+    return jnp.where(sel, cand.astype(tokens.dtype), tokens)
+
+
+def _refresh_cache(params, tokens, cfg, spec, kv_cache, extras):
+    """Full bidirectional forward; commit KV for every position."""
+    out = forward(params, tokens, cfg=cfg, mode=masks.BIDIRECTIONAL,
+                  prompt_len=spec.full_prompt_len, block_size=spec.block_size,
+                  attn_impl=spec.attn_impl, **extras)
+    return C.commit(kv_cache, out.emissions, 0)
+
+
+# ---------------------------------------------------------------------------
+# Finalization family: top1 (the teacher / trajectory collector)
+# ---------------------------------------------------------------------------
+def _top1_loop(params, prompt_tokens, *, cfg, spec, strategy, key, extras,
+               record_hidden):
+    """N = L_g steps, one most-confident token finalized per step.
+
+    With ``record_hidden`` also returns ``finalized_at`` (b, L_g) — the step
+    index at which each position was finalized (a compact, exact encoding of
+    the monotone trajectory T_x) — and the hidden buffer H (b, L_g, d)."""
+    tokens = init_canvas(prompt_tokens, spec, cfg)
+    b, T = tokens.shape
+    P, B, G = spec.prompt_len, spec.block_size, spec.gen_len
+    finalized_at = jnp.full((b, G), -1, jnp.int32)
+    hidden_buf = jnp.zeros((b, G, cfg.d_model), jnp.float32)
+    step_counter = 0
+
+    for blk in range(spec.n_blocks):
+        start = P + blk * B
+        bmask = _block_pos_mask(T, start, B)
+        for _ in range(B):
+            key, sub = jax.random.split(key)
+            out = _full_logits(params, tokens, cfg, spec, strategy.attn_mode,
+                               extras)
+            cand, conf = D.confidence_and_candidates(
+                out.logits, tokens, cfg.mask_token_id, spec.temperature, sub)
+            sel = D.select_topk_in_block(conf, bmask[None, :], 1)
+            tokens = jnp.where(sel, cand.astype(tokens.dtype), tokens)
+            if record_hidden:
+                gen_sel = sel[:, P:]
+                finalized_at = jnp.where(gen_sel, step_counter, finalized_at)
+                hidden_buf = jnp.where(
+                    gen_sel[..., None], out.hidden[:, P:].astype(jnp.float32),
+                    hidden_buf)
+            step_counter += 1
+
+    steps = jnp.full((b,), step_counter, jnp.int32)
+    res = SampleResult(tokens, steps, jnp.asarray(step_counter, jnp.int32),
+                       _gen_lengths(tokens, spec, cfg))
+    if record_hidden:
+        return res, finalized_at, hidden_buf
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Finalization family: threshold (Fast-dLLM / cache baselines / CDLM)
+# ---------------------------------------------------------------------------
+def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
+                    extras, use_long_window):
+    tokens = init_canvas(prompt_tokens, spec, cfg)
+    b, T = tokens.shape
+    P, B, off = spec.prompt_len, spec.block_size, spec.pos_offset
+    S = T + off
+    policy = strategy.cache_policy
+    approx = policy in ("approx-dual", "approx-interval")
+    dx = _dec_extras(extras)
+    R = spec.cache_refresh_interval
+    done = jnp.zeros((b,), bool)
+    steps = jnp.zeros((b,), jnp.int32)
+
+    if policy == "none":
+        kv_cache = None
+        calls = jnp.zeros((), jnp.int32)
+    elif approx:
+        kv_cache = C.init_cache(cfg, b, S, dtype=cfg.dtype)
+        kv_cache = _refresh_cache(params, tokens, cfg, spec, kv_cache, extras)
+        calls = jnp.ones((), jnp.int32)
+    else:  # exact-commit: prefill prompt (+ prefix embeds) block-causally
+        kv_cache = C.init_cache(cfg, b, S, dtype=cfg.dtype)
+        out = forward(params, tokens[:, :P], cfg=cfg, mode=strategy.attn_mode,
+                      prompt_len=spec.full_prompt_len, block_size=B,
+                      attn_impl=spec.attn_impl, **extras)
+        kv_cache = C.commit(kv_cache, out.emissions, 0)
+        calls = jnp.ones((), jnp.int32)
+
+    for blk in range(spec.n_blocks):
+        start = P + blk * B                  # canvas coords
+        astart = start + off                 # absolute sequence coords
+        bmask = _block_pos_mask(T, start, B)
+        # approx policies: stale cache entries for the active block itself
+        # are invalid — fresh block KV is computed every step.
+        cache_valid = ~_block_pos_mask(S, astart, B) if approx else None
+
+        def block_out(tokens, kv_cache):
+            block_tokens = jax.lax.dynamic_slice_in_dim(tokens, start, B, 1)
+            return forward(params, block_tokens, cfg=cfg,
+                           mode=strategy.attn_mode,
+                           prompt_len=spec.full_prompt_len, block_size=B,
+                           positions=astart + jnp.arange(B), cache=kv_cache,
+                           cache_len=astart, cache_valid=cache_valid,
+                           use_long_window=use_long_window,
+                           attn_impl=spec.attn_impl, **dx)
+
+        if policy == "approx-dual" and blk > 0:
+            kv_cache = _refresh_cache(params, tokens, cfg, spec, kv_cache,
+                                      extras)
+            calls = calls + 1
+
+        def cond(st):
+            tokens, kv_cache, steps, calls, key, done, it = st
+            masked = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :]
+                             & ~done[:, None], axis=-1)
+            return jnp.any(masked) & (it < B)
+
+        def body(st):
+            tokens, kv_cache, steps, calls, key, done, it = st
+            key, sub = jax.random.split(key)
+            if policy == "approx-interval":
+                kv_cache = jax.lax.cond(
+                    (it % R) == (R - 1),
+                    lambda c: _refresh_cache(params, tokens, cfg, spec, c,
+                                             extras),
+                    lambda c: c, kv_cache)
+            if policy == "none":
+                out = _full_logits(params, tokens, cfg, spec,
+                                   strategy.attn_mode, extras)
+                logits_canvas = out.logits
+            else:
+                out = block_out(tokens, kv_cache)
+                logits_canvas = jnp.zeros((b, T, out.logits.shape[-1]),
+                                          out.logits.dtype)
+                logits_canvas = jax.lax.dynamic_update_slice_in_dim(
+                    logits_canvas, out.logits, start, 1)
+            active = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :],
+                             axis=-1) & ~done
+            tokens = _threshold_update(tokens, logits_canvas, bmask, spec,
+                                       cfg, sub, active)
+            return (tokens, kv_cache, steps + active.astype(jnp.int32),
+                    calls + 1, key, done, it + 1)
+
+        tokens, kv_cache, steps, calls, key, done, _ = jax.lax.while_loop(
+            cond, body,
+            (tokens, kv_cache, steps, calls, key, done,
+             jnp.zeros((), jnp.int32)))
+
+        if policy == "exact-commit":
+            # commit pass: recompute the finalized block's KV exactly
+            out = block_out(tokens, kv_cache)
+            kv_cache = C.commit(kv_cache, out.emissions, astart)
+            calls = calls + 1
+
+        if spec.early_stop:
+            done = done | jnp.any(
+                (tokens == cfg.eos_token_id) & bmask[None, :], -1)
+
+    return SampleResult(tokens, steps, calls, _gen_lengths(tokens, spec, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Finalization family: greedy-next (AR baseline / RWKV decode)
+# ---------------------------------------------------------------------------
+def _greedy_next_loop(params, prompt_tokens, *, cfg, spec, strategy, extras):
+    tokens = init_canvas(prompt_tokens, spec, cfg)
+    b, T = tokens.shape
+    P, off = spec.prompt_len, spec.pos_offset
+    S = T + off
+    kv_cache = C.init_cache(cfg, b, S, dtype=cfg.dtype)
+    out = forward(params, tokens[:, :P], cfg=cfg, mode=strategy.attn_mode,
+                  attn_impl=spec.attn_impl, **extras)
+    kv_cache = C.commit(kv_cache, out.emissions, 0)
+    last_logits = out.logits[:, -1]
+    dx = _dec_extras(extras)
+
+    def body(i, st):
+        tokens, kv_cache, last_logits, done, steps, calls = st
+        pos = P + i
+        nxt = jnp.argmax(last_logits, axis=-1).astype(tokens.dtype)
+        nxt = jnp.where(done, jnp.asarray(cfg.eos_token_id, tokens.dtype), nxt)
+        tokens = jax.lax.dynamic_update_slice(tokens, nxt[:, None], (0, pos))
+        steps = steps + (~done).astype(jnp.int32)
+        done = done | (nxt == cfg.eos_token_id)
+        out = forward(params, nxt[:, None], cfg=cfg, mode=strategy.attn_mode,
+                      positions=(pos + off)[None], cache=kv_cache,
+                      cache_len=pos + off, attn_impl=spec.attn_impl, **dx)
+        kv_cache = C.commit(kv_cache, out.emissions, pos + off)
+        return (tokens, kv_cache, out.logits[:, -1], done, steps, calls + 1)
+
+    done = jnp.zeros((b,), bool)
+    steps = jnp.zeros((b,), jnp.int32)
+    calls = jnp.ones((), jnp.int32)
+    tokens, kv_cache, last_logits, done, steps, calls = jax.lax.fori_loop(
+        0, spec.gen_len, body,
+        (tokens, kv_cache, last_logits, done, steps, calls))
+
+    return SampleResult(tokens, steps, calls, _gen_lengths(tokens, spec, cfg))
+
+
+# ---------------------------------------------------------------------------
+# The unified entry point
+# ---------------------------------------------------------------------------
+def run_block_loop(params, prompt_tokens, *, cfg: ModelConfig,
+                   spec: SamplerSpec, strategy: DecodeStrategy, key=None,
+                   extras=None, record_hidden: bool = False,
+                   use_long_window: bool = False):
+    """Decode ``prompt_tokens`` with ``strategy`` over the static block grid.
+
+    Returns :class:`SampleResult`; with ``record_hidden`` (``top1``
+    finalization only) also the trajectory encoding ``(finalized_at, H)``.
+    """
+    extras = extras or {}
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if record_hidden and strategy.finalize != "top1":
+        raise ValueError("record_hidden requires the 'top1' finalize rule "
+                         f"(strategy {strategy.name!r} uses "
+                         f"{strategy.finalize!r})")
+    if strategy.finalize == "top1":
+        return _top1_loop(params, prompt_tokens, cfg=cfg, spec=spec,
+                          strategy=strategy, key=key, extras=extras,
+                          record_hidden=record_hidden)
+    if strategy.finalize == "threshold":
+        return _threshold_loop(params, prompt_tokens, cfg=cfg, spec=spec,
+                               strategy=strategy, key=key, extras=extras,
+                               use_long_window=use_long_window)
+    return _greedy_next_loop(params, prompt_tokens, cfg=cfg, spec=spec,
+                             strategy=strategy, extras=extras)
+
+
+# ---------------------------------------------------------------------------
+# Per-lane block decode (the continuous-batching primitive)
+# ---------------------------------------------------------------------------
+def lane_block_forward(params, tokens, starts, kv_cache, *, cfg: ModelConfig,
+                       spec: SamplerSpec, extras=None,
+                       use_long_window: bool = False):
+    """Block-causal cached forward where each lane decodes its own block.
+
+    tokens: (b, T) canvases; starts: (b,) canvas coordinate of each lane's
+    active block; kv_cache: batch cache (leaves batched on axis 1).
+    Returns ``(logits (b, B, V), emissions)`` with emissions batched on
+    axis 1, ready for :func:`repro.core.cache.commit_rows`.
+
+    Exactness: under the block-causal mask a lane's logits depend only on
+    its own committed cache rows and its own block, so mixing lanes at
+    different block offsets in one batch is loss-free — this is what makes
+    continuous block-level batching safe.
+    """
+    B, off = spec.block_size, spec.pos_offset
+    dx = _dec_extras(extras or {})
+
+    def one(tok, start, cache_lane):
+        astart = start + off
+        block_tok = jax.lax.dynamic_slice(tok, (start,), (B,))[None]
+        cache1 = jax.tree_util.tree_map(lambda a: a[:, None], cache_lane)
+        out = forward(params, block_tok, cfg=cfg, mode=masks.BLOCK_CAUSAL,
+                      prompt_len=spec.full_prompt_len, block_size=B,
+                      positions=astart + jnp.arange(B), cache=cache1,
+                      cache_len=astart, use_long_window=use_long_window,
+                      attn_impl=spec.attn_impl, **dx)
+        emissions = jax.tree_util.tree_map(lambda a: a[:, 0], out.emissions)
+        return out.logits[0], emissions
+
+    return jax.vmap(one, in_axes=(0, 0, 1), out_axes=(0, 1))(
+        tokens, starts, kv_cache)

@@ -12,6 +12,11 @@ over period slots of dicts whose leaves are stacked over periods:
 ``commit`` writes a block's emissions at ``offset`` (KV) / replaces state
 (SSM) — called only at block completion, so caching stays *exact*: committed
 KV always derives from finalized token values (the "commit pass").
+
+``reset`` / ``commit_rows`` are the per-lane variants: they touch only the
+selected batch lanes (each at its own offset), so a serving scheduler can
+evict a finished sequence and admit a new one mid-flight without perturbing
+its neighbors — safe precisely because block-causal caching is exact.
 """
 from __future__ import annotations
 
@@ -72,6 +77,66 @@ def commit(cache: tuple, emissions: tuple, offset) -> tuple:
                     buf, val.astype(buf.dtype), (0, 0, offset, 0, 0))
             elif key in cslot:
                 ns[key] = val.astype(cslot[key].dtype)
+        new_slots.append(ns)
+    return tuple(new_slots)
+
+
+def _row_mask(rows, batch: int) -> jnp.ndarray:
+    """Normalize ``rows`` (bool lane mask or int lane indices) to (b,) bool."""
+    rows = jnp.asarray(rows)
+    if rows.dtype == jnp.bool_:
+        return rows
+    return jnp.zeros((batch,), bool).at[rows].set(True)
+
+
+def _broadcast_rows(mask, leaf):
+    """Reshape a (b,) lane mask to broadcast against a (np, b, ...) leaf."""
+    return mask.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+
+
+def reset(cache: tuple, rows) -> tuple:
+    """Zero the selected batch lanes of every cache buffer.
+
+    ``rows``: (b,) bool lane mask (or int lane indices). Neighboring lanes
+    are untouched — the primitive that lets a serving scheduler recycle one
+    finished lane while the rest of the batch keeps decoding.
+    """
+    batch = jax.tree_util.tree_leaves(cache)[0].shape[1]
+    mask = _row_mask(rows, batch)
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.where(_broadcast_rows(mask, leaf),
+                               jnp.zeros((), leaf.dtype), leaf), cache)
+
+
+def commit_rows(cache: tuple, emissions: tuple, offsets, rows) -> tuple:
+    """Per-lane :func:`commit`: write emissions only for the selected lanes,
+    each at its own sequence ``offset``.
+
+    ``offsets``: scalar or (b,) int — KV insert position per lane;
+    ``rows``: (b,) bool lane mask (or int lane indices). Lanes outside
+    ``rows`` keep their old cache contents bit-for-bit.
+    """
+    batch = jax.tree_util.tree_leaves(cache)[0].shape[1]
+    mask = _row_mask(rows, batch)
+    offsets = jnp.broadcast_to(jnp.asarray(offsets, jnp.int32), (batch,))
+
+    def write_kv(buf, val):
+        upd = jax.vmap(
+            lambda b_l, v_l, off: jax.lax.dynamic_update_slice(
+                b_l, v_l.astype(b_l.dtype), (0, off, 0, 0)),
+            in_axes=(1, 1, 0), out_axes=1)(buf, val, offsets)
+        return jnp.where(_broadcast_rows(mask, buf), upd, buf)
+
+    new_slots = []
+    for cslot, eslot in zip(cache, emissions):
+        ns = dict(cslot)
+        for key, val in eslot.items():
+            if key in ("k", "v"):
+                ns[key] = write_kv(cslot[key], val)
+            elif key in cslot:
+                old = cslot[key]
+                ns[key] = jnp.where(_broadcast_rows(mask, old),
+                                    val.astype(old.dtype), old)
         new_slots.append(ns)
     return tuple(new_slots)
 

@@ -12,4 +12,10 @@ Each subpackage: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 ``interpret=True`` shape/dtype sweeps in tests/test_kernels.py; on real TPU
 pass ``interpret=False``.
 """
-from repro.kernels import block_attn, decode_attn, xent  # noqa: F401
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams (~0.5); support both.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    getattr(_pltpu, "TPUCompilerParams")
+
+from repro.kernels import block_attn, decode_attn, xent  # noqa: F401,E402

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -116,7 +118,7 @@ def decode_attention_partial(q, k_cache, v_cache, cache_len, *,
             pltpu.VMEM((BqG, 1), jnp.float32),
             pltpu.VMEM((BqG, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lens, q, k_cache, v_cache)

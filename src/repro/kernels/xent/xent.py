@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 
 def _xent_kernel(h_ref, w_ref, y_ref, loss_ref, m_scr, l_scr, t_scr, *,
                  block_t, block_v, n_v):
@@ -81,7 +83,7 @@ def xent_forward(hidden, w, targets, *, block_t: int = 128,
             pltpu.VMEM((block_t, 1), jnp.float32),
             pltpu.VMEM((block_t, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(hidden, w, targets)

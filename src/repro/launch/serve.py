@@ -1,11 +1,14 @@
 """Serving launcher CLI: load a checkpoint (or train the cached toy assets)
-and serve batched requests with any sampler.
+and serve batched requests with any sampler strategy, under either the
+static or the continuous block-level batching scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --sampler cdlm --requests 32
+    PYTHONPATH=src python -m repro.launch.serve --scheduler continuous
 """
 import argparse
 import os
 import sys
+import time
 
 
 def main():
@@ -13,6 +16,10 @@ def main():
     ap.add_argument("--sampler", default="cdlm",
                     choices=["vanilla", "fast_dllm", "dual_cache",
                              "interval_cache", "cdlm", "ar"])
+    ap.add_argument("--scheduler", default="static",
+                    choices=["static", "continuous"],
+                    help="continuous = slot-based block-level batching "
+                         "(cdlm only)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--threshold", type=float, default=0.9)
@@ -24,7 +31,7 @@ def main():
                                     "..", "..", ".."))
     from benchmarks import common
     from repro.configs.base import ServeConfig
-    from repro.serving import Engine, Request, efficiency_report
+    from repro.serving import Request, efficiency_report, make_engine
 
     if args.ckpt:
         import jax
@@ -40,14 +47,21 @@ def main():
                         block_size=common.CDLM_CFG.block_size,
                         gen_length=common.TASK.gen_len,
                         sampler=args.sampler,
-                        conf_threshold=args.threshold)
-    eng = Engine(params, common.CFG, serve, prompt_len=common.TASK.prompt_len)
+                        conf_threshold=args.threshold,
+                        scheduler=args.scheduler)
+    eng = make_engine(params, common.CFG, serve,
+                      prompt_len=common.TASK.prompt_len)
     ev = common.corpus().eval_batch(args.requests)
     reqs = [Request(prompt=p, id=i) for i, p in enumerate(ev["prompt"])]
     eng.warmup()
+    t0 = time.perf_counter()
     resp = eng.generate(reqs)
+    wall = time.perf_counter() - t0
     rep = efficiency_report(resp)
-    print(f"{args.sampler}: TPS={rep['tps']:.0f} "
+    # wall-clock TPS is comparable across schedulers; latency_s is not
+    # (compute share for static, arrival->completion for continuous)
+    tps = sum(r.gen_length for r in resp) / wall if wall else 0.0
+    print(f"{args.sampler}/{args.scheduler}: TPS={tps:.0f} "
           f"latency={rep['latency_s']*1e3:.1f}ms steps={rep['steps']:.1f} "
           f"gen_len={rep['gen_length']:.1f}  ({len(resp)} requests)")
 

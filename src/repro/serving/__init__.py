@@ -1,1 +1,8 @@
-from repro.serving.engine import Engine, Request, Response, efficiency_report  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ContinuousEngine,
+    Engine,
+    Request,
+    Response,
+    efficiency_report,
+    make_engine,
+)

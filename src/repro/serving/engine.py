@@ -1,23 +1,52 @@
-"""Batched serving engine.
+"""Batched serving engines.
 
-Wraps a model + sampler into a request/response loop with the paper's
-efficiency metrics: per-sample latency, TPS (valid tokens / wall-clock),
-refinement steps, generation length — the exact columns of Tables 1–2.
-Requests are padded into fixed-shape batches (static shapes keep the jitted
-sampler cache warm); per-sequence early stopping happens inside the sampler.
+Two schedulers over the unified block-decode core
+(``repro.core.block_loop``):
+
+- :class:`Engine` — **static batching**: requests are padded into
+  fixed-shape batches and each batch runs the full jitted sampler to
+  completion. Simple, works with every sampler strategy, but lanes that
+  finish early (EOS / short ``max_tokens``) burn compute as padding until
+  the whole batch drains.
+
+- :class:`ContinuousEngine` — **continuous block-level batching**: a
+  persistent decode batch of ``max_batch`` lanes advances one *block* per
+  jitted step, each lane at its own block offset
+  (:func:`repro.core.block_loop.lane_block_forward`). At every block
+  boundary finished lanes are evicted, their cache rows reset
+  (:func:`repro.core.cache.reset`), and queued requests admitted mid-flight
+  (prompt prefill committed into the freed rows via ``commit_rows``).
+  Block-causal cache exactness makes lane recycling loss-free, so a lane
+  admitted mid-flight decodes bit-identically to one decoded in isolation.
+
+Metrics follow the paper (Tables 1–2): per-request latency, TPS (valid
+tokens / wall-clock), refinement steps, generation length. The continuous
+engine reports true per-request latency (arrival → completion, queueing
+included) instead of a per-chunk average.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from collections import deque
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
-from repro.core.sampler import SAMPLERS, SamplerSpec
+from repro.core import cache as C
+from repro.core import diffusion as D
+from repro.core import masks
+from repro.core.block_loop import (
+    SamplerSpec,
+    _gen_lengths,
+    init_canvas,
+    lane_block_forward,
+)
+from repro.core.sampler import SAMPLERS
+from repro.models import forward
 
 
 @dataclasses.dataclass
@@ -25,6 +54,8 @@ class Request:
     prompt: np.ndarray                       # (P,) int32
     extras: Optional[Dict[str, np.ndarray]] = None
     id: int = 0
+    max_tokens: Optional[int] = None         # per-request generation cap
+    arrival_s: float = 0.0                   # arrival offset in the trace
 
 
 @dataclasses.dataclass
@@ -33,10 +64,26 @@ class Response:
     tokens: np.ndarray                       # generated span (gen_len,)
     gen_length: int
     steps: int
-    latency_s: float                         # per-sample share of batch time
+    # static Engine: per-sample share of batch compute time (arrival_s is
+    # not modeled); ContinuousEngine: true arrival -> completion, queueing
+    # included. Compare throughput across engines via wall-clock, not this.
+    latency_s: float
+    queue_s: float = 0.0                     # arrival -> admission (continuous)
+
+
+def _validate_requests(requests: Sequence[Request]) -> None:
+    keys0 = frozenset(requests[0].extras or {})
+    for r in requests:
+        if frozenset(r.extras or {}) != keys0:
+            raise ValueError(
+                "all requests in a batch must carry the same extras keys: "
+                f"request {requests[0].id} has {sorted(keys0)}, request "
+                f"{r.id} has {sorted(r.extras or {})}")
 
 
 class Engine:
+    """Static fixed-shape batching over any sampler strategy."""
+
     def __init__(self, params, cfg: ModelConfig, serve: ServeConfig,
                  prompt_len: int, *, pos_offset: int = 0,
                  use_long_window: bool = False):
@@ -70,6 +117,9 @@ class Engine:
 
     def generate(self, requests: Sequence[Request],
                  key=None) -> List[Response]:
+        if not requests:
+            return []
+        _validate_requests(requests)
         key = key if key is not None else jax.random.PRNGKey(0)
         out: List[Response] = []
         B = self.serve.max_batch
@@ -92,15 +142,286 @@ class Engine:
             steps = np.asarray(res.steps)
             glens = np.asarray(res.gen_lengths)
             for j, r in enumerate(chunk):
+                glen = int(glens[j])
+                if r.max_tokens is not None:
+                    glen = min(glen, r.max_tokens)
                 out.append(Response(
                     id=r.id, tokens=toks[j, self.spec.prompt_len:],
-                    gen_length=int(glens[j]), steps=int(steps[j]),
+                    gen_length=glen, steps=int(steps[j]),
                     latency_s=dt))
         return out
 
 
+# ---------------------------------------------------------------------------
+# Continuous block-level batching
+# ---------------------------------------------------------------------------
+class _SlotState(NamedTuple):
+    tokens: jnp.ndarray       # (N, P+G) canvases
+    cache: Any                # batch KV cache, lanes on axis 1
+    blk: jnp.ndarray          # (N,) int32 — each lane's current block index
+    lane_nblocks: jnp.ndarray  # (N,) int32 — blocks this request decodes
+    live: jnp.ndarray         # (N,) bool — lane occupied and unfinished
+    steps: jnp.ndarray        # (N,) int32 refinement iterations
+    calls: jnp.ndarray        # () int32 total forward passes
+    key: jnp.ndarray
+
+
+class ContinuousEngine:
+    """Slot-based continuous batching over the CDLM exact-cache strategy.
+
+    Scheduling happens at block boundaries: each jitted ``_decode_block``
+    call advances every live lane by one block (threshold refinement +
+    commit pass); between calls the host evicts finished lanes and admits
+    arrived requests into the freed slots. Only the ``cdlm`` strategy is
+    supported — approximate-cache strategies refresh KV from the *whole*
+    canvas, which couples lanes to batch-global state, and only the exact
+    block-causal cache makes per-lane recycling loss-free.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, serve: ServeConfig,
+                 prompt_len: int, *, use_long_window: bool = False):
+        if serve.sampler != "cdlm":
+            raise ValueError(
+                "ContinuousEngine requires the 'cdlm' strategy (exact "
+                f"block-causal cache); got sampler={serve.sampler!r}")
+        if cfg.is_encoder_decoder:
+            raise ValueError("ContinuousEngine does not support "
+                             "encoder-decoder models yet (per-lane encoder "
+                             "state is not scheduled)")
+        if serve.temperature > 0:
+            # all lanes share one RNG split per joint refinement iteration,
+            # so sampled decoding would depend on which requests happen to
+            # share the batch — breaking the isolation-exactness guarantee.
+            # Per-lane RNG streams are needed before this can be allowed.
+            raise ValueError("ContinuousEngine currently supports greedy "
+                             "decoding only (temperature=0); got "
+                             f"temperature={serve.temperature}")
+        self.params = params
+        self.cfg = cfg
+        self.serve = serve
+        self.spec = SamplerSpec(
+            prompt_len=prompt_len, gen_len=serve.gen_length,
+            block_size=serve.block_size, conf_threshold=serve.conf_threshold,
+            temperature=serve.temperature, early_stop=True)
+        self.n_lanes = serve.max_batch
+        self._use_long_window = use_long_window
+        self._jit_admit = jax.jit(self._admit)
+        self._jit_decode_block = jax.jit(self._decode_block)
+        self._jit_gen_lengths = jax.jit(
+            lambda tokens: _gen_lengths(tokens, self.spec, self.cfg))
+        self._warm = False
+
+    # -- jitted state transitions -------------------------------------------
+    def _init_state(self, key) -> _SlotState:
+        N = self.n_lanes
+        T = self.spec.prompt_len + self.spec.gen_len
+        return _SlotState(
+            tokens=jnp.full((N, T), self.cfg.mask_token_id, jnp.int32),
+            cache=C.init_cache(self.cfg, N, T, dtype=self.cfg.dtype),
+            blk=jnp.zeros((N,), jnp.int32),
+            lane_nblocks=jnp.full((N,), self.spec.n_blocks, jnp.int32),
+            live=jnp.zeros((N,), bool),
+            steps=jnp.zeros((N,), jnp.int32),
+            calls=jnp.zeros((), jnp.int32),
+            key=key)
+
+    def _admit(self, params, state: _SlotState, prompts, admit,
+               nblocks) -> _SlotState:
+        """Admit requests into freed lanes: write canvases, reset cache rows,
+        prefill prompts under the block-causal mask, commit into those rows."""
+        spec, cfg = self.spec, self.cfg
+        canvas = init_canvas(prompts, spec, cfg)
+        tokens = jnp.where(admit[:, None], canvas, state.tokens)
+        cache = C.reset(state.cache, admit)
+        out = forward(params, tokens[:, :spec.prompt_len], cfg=cfg,
+                      mode=masks.BLOCK_CAUSAL, prompt_len=spec.full_prompt_len,
+                      block_size=spec.block_size, attn_impl=spec.attn_impl)
+        cache = C.commit_rows(cache, out.emissions, 0, admit)
+        return state._replace(
+            tokens=tokens, cache=cache,
+            blk=jnp.where(admit, 0, state.blk),
+            lane_nblocks=jnp.where(admit, nblocks, state.lane_nblocks),
+            live=state.live | admit,
+            steps=jnp.where(admit, 0, state.steps),
+            calls=state.calls + 1)
+
+    def _decode_block(self, params, state: _SlotState) -> _SlotState:
+        """Advance every live lane by one block: threshold refinement to
+        completion, then the exact commit pass into each lane's cache rows."""
+        spec, cfg = self.spec, self.cfg
+        P, B = spec.prompt_len, spec.block_size
+        N = self.n_lanes
+        live = state.live
+        starts = P + jnp.clip(state.blk, 0, spec.n_blocks - 1) * B
+
+        def slice_blocks(tokens):
+            return jax.vmap(
+                lambda t, s: jax.lax.dynamic_slice(t, (s,), (B,)))(
+                    tokens, starts)
+
+        def scatter_blocks(tokens, blocks):
+            return jax.vmap(
+                lambda t, b, s: jax.lax.dynamic_update_slice(t, b, (s,)))(
+                    tokens, blocks, starts)
+
+        all_block = jnp.ones((1, B), bool)
+
+        def cond(st):
+            tokens, steps, calls, key, it = st
+            bt = slice_blocks(tokens)
+            act = jnp.any(bt == cfg.mask_token_id, axis=-1) & live
+            return jnp.any(act) & (it < B)
+
+        def body(st):
+            tokens, steps, calls, key, it = st
+            key, sub = jax.random.split(key)
+            logits, _ = lane_block_forward(
+                params, tokens, starts, state.cache, cfg=cfg, spec=spec,
+                use_long_window=self._use_long_window)
+            bt = slice_blocks(tokens)
+            cand, conf = D.confidence_and_candidates(
+                logits, bt, cfg.mask_token_id, spec.temperature, sub)
+            sel = D.select_threshold_in_block(conf, all_block,
+                                              spec.conf_threshold)
+            active = jnp.any(bt == cfg.mask_token_id, axis=-1) & live
+            sel = sel & active[:, None]
+            bt = jnp.where(sel, cand.astype(bt.dtype), bt)
+            return (scatter_blocks(tokens, bt),
+                    steps + active.astype(jnp.int32), calls + 1, key, it + 1)
+
+        tokens, steps, calls, key, _ = jax.lax.while_loop(
+            cond, body,
+            (state.tokens, state.steps, state.calls, state.key,
+             jnp.zeros((), jnp.int32)))
+
+        # commit pass: recompute the finalized blocks' KV exactly, only for
+        # live lanes, each at its own offset
+        _, emissions = lane_block_forward(
+            params, tokens, starts, state.cache, cfg=cfg, spec=spec,
+            use_long_window=self._use_long_window)
+        cache = C.commit_rows(state.cache, emissions, starts, live)
+        calls = calls + 1
+
+        bt = slice_blocks(tokens)
+        eos_hit = jnp.any(bt == cfg.eos_token_id, axis=-1)
+        blk = jnp.where(live, state.blk + 1, state.blk)
+        finished = live & (eos_hit | (blk >= state.lane_nblocks))
+        return state._replace(tokens=tokens, cache=cache, blk=blk,
+                              live=live & ~finished, steps=steps,
+                              calls=calls, key=key)
+
+    # -- host-side scheduler -------------------------------------------------
+    def warmup(self):
+        state = self._init_state(jax.random.PRNGKey(0))
+        N, P = self.n_lanes, self.spec.prompt_len
+        state = self._jit_admit(self.params, state,
+                                jnp.zeros((N, P), jnp.int32),
+                                jnp.ones((N,), bool),
+                                jnp.full((N,), self.spec.n_blocks, jnp.int32))
+        state = self._jit_decode_block(self.params, state)
+        self._jit_gen_lengths(state.tokens).block_until_ready()
+        self._warm = True
+
+    def _lane_nblocks(self, req: Request) -> int:
+        B = self.spec.block_size
+        if req.max_tokens is None:
+            return self.spec.n_blocks
+        return max(1, min(self.spec.n_blocks, -(-req.max_tokens // B)))
+
+    def generate(self, requests: Sequence[Request],
+                 key=None) -> List[Response]:
+        """Serve ``requests`` (honoring ``arrival_s`` offsets) and return
+        responses in completion order."""
+        if not requests:
+            return []
+        _validate_requests(requests)
+        if requests[0].extras:
+            raise ValueError("ContinuousEngine does not support request "
+                             "extras (encoder/prefix embeds) yet")
+        key = key if key is not None else jax.random.PRNGKey(0)
+        N, P, B = self.n_lanes, self.spec.prompt_len, self.spec.block_size
+        queue = deque(sorted(requests, key=lambda r: r.arrival_s))
+        state = self._init_state(key)
+        lane_req: List[Optional[Request]] = [None] * N
+        lane_admit_t = np.zeros((N,), np.float64)
+        out: List[Response] = []
+        t0 = time.perf_counter()
+
+        while queue or any(r is not None for r in lane_req):
+            now = time.perf_counter() - t0
+            # ---- admission at the block boundary ----
+            free = [i for i in range(N) if lane_req[i] is None]
+            admit = np.zeros((N,), bool)
+            prompts = np.zeros((N, P), np.int32)
+            nblocks = np.zeros((N,), np.int32)
+            for lane in free:
+                if not queue or queue[0].arrival_s > now:
+                    break
+                req = queue.popleft()
+                lane_req[lane] = req
+                lane_admit_t[lane] = now
+                admit[lane] = True
+                prompts[lane] = req.prompt
+                nblocks[lane] = self._lane_nblocks(req)
+            if admit.any():
+                state = self._jit_admit(self.params, state,
+                                        jnp.asarray(prompts),
+                                        jnp.asarray(admit),
+                                        jnp.asarray(nblocks))
+            if not any(r is not None for r in lane_req):
+                # nothing decoding and nothing arrived yet: idle to the next
+                # arrival instead of spinning
+                if queue:
+                    wait = queue[0].arrival_s - (time.perf_counter() - t0)
+                    if wait > 0:
+                        time.sleep(wait)
+                continue
+
+            # ---- one block-level decode step for every live lane ----
+            state = self._jit_decode_block(self.params, state)
+            live = np.asarray(state.live)
+            t_done = time.perf_counter() - t0
+
+            # ---- eviction of finished lanes ----
+            done_lanes = [i for i in range(N)
+                          if lane_req[i] is not None and not live[i]]
+            if done_lanes:
+                toks = np.asarray(state.tokens)
+                steps = np.asarray(state.steps)
+                glens = np.asarray(self._jit_gen_lengths(state.tokens))
+                for lane in done_lanes:
+                    req = lane_req[lane]
+                    gen = toks[lane, P:]
+                    glen = int(glens[lane])
+                    if req.max_tokens is not None:
+                        glen = min(glen, req.max_tokens)
+                    out.append(Response(
+                        id=req.id, tokens=gen, gen_length=glen,
+                        steps=int(steps[lane]),
+                        latency_s=t_done - req.arrival_s,
+                        queue_s=lane_admit_t[lane] - req.arrival_s))
+                    lane_req[lane] = None
+        return out
+
+
+def make_engine(params, cfg: ModelConfig, serve: ServeConfig,
+                prompt_len: int, **kw):
+    """Engine factory switched by ``serve.scheduler``."""
+    if serve.scheduler == "continuous":
+        if kw.pop("pos_offset", 0):
+            raise ValueError("ContinuousEngine does not support prefix "
+                             "embeds (pos_offset != 0) yet")
+        return ContinuousEngine(params, cfg, serve, prompt_len, **kw)
+    if serve.scheduler == "static":
+        return Engine(params, cfg, serve, prompt_len, **kw)
+    raise ValueError(f"unknown scheduler {serve.scheduler!r} "
+                     "(expected 'static' or 'continuous')")
+
+
 def efficiency_report(responses: Sequence[Response]) -> Dict[str, float]:
     """Per-sample averages, the paper's reporting convention (App. A.3)."""
+    if not responses:
+        return {"latency_s": 0.0, "steps": 0.0, "gen_length": 0.0, "tps": 0.0}
     lat = float(np.mean([r.latency_s for r in responses]))
     steps = float(np.mean([r.steps for r in responses]))
     glen = float(np.mean([r.gen_length for r in responses]))

@@ -1,0 +1,90 @@
+"""Fallback for the optional ``hypothesis`` test dependency.
+
+``hypothesis`` is declared as an optional test extra (``repro[test]``);
+when it is installed the real library is re-exported unchanged. When it is
+absent, a small deterministic stand-in drives each property test with the
+strategy's boundary values first, then seeded pseudo-random draws, so the
+tier-1 suite stays runnable (and still exercises the edge cases hypothesis
+would prioritize) without the dependency.
+
+Test modules import through this shim::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random as _random
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        """A value generator: boundary examples first, then random draws."""
+
+        def __init__(self, draw_fn, boundary=()):
+            self._draw_fn = draw_fn
+            self._boundary = tuple(boundary)
+
+        def example(self, rng, i):
+            if i < len(self._boundary):
+                return self._boundary[i]
+            return self._draw_fn(rng, i)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng, i: rng.randint(min_value, max_value),
+                             boundary=(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng, i: rng.uniform(min_value, max_value),
+                             boundary=(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng, i: bool(rng.getrandbits(1)),
+                             boundary=(False, True))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng, i: rng.choice(elements),
+                             boundary=elements[:1])
+
+        @staticmethod
+        def composite(fn):
+            # the example index is shared with nested draws, so passes 0/1
+            # automatically draw every inner strategy's min/max boundary.
+            def strategy_factory(*args, **kwargs):
+                def draw_value(rng, i):
+                    return fn(lambda s: s.example(rng, i), *args, **kwargs)
+                return _Strategy(draw_value)
+            return strategy_factory
+
+    strategies = _StrategiesModule()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(test_fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = _random.Random(0)
+                for i in range(n):
+                    vals = [s.example(rng, i) for s in strats]
+                    test_fn(*vals)
+            wrapper.__name__ = test_fn.__name__
+            wrapper.__doc__ = test_fn.__doc__
+            wrapper.__module__ = test_fn.__module__
+            wrapper._max_examples = getattr(test_fn, "_max_examples",
+                                            _DEFAULT_MAX_EXAMPLES)
+            return wrapper
+        return deco

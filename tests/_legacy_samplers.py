@@ -1,0 +1,409 @@
+"""FROZEN seed-PR sampler implementations (verbatim from git history).
+
+These are the six hand-rolled block loops that the unified engine in
+``repro.core.block_loop`` replaced. They exist ONLY as the reference for
+the equivalence tests in ``tests/test_block_loop.py`` proving that each
+``DecodeStrategy`` port is bit-identical (tokens, steps, n_model_calls,
+gen_lengths) to the seed behavior. Do not modify and do not import from
+production code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as C
+from repro.core import diffusion as D
+from repro.core import masks
+from repro.models import forward
+
+
+class SampleResult(NamedTuple):
+    tokens: jnp.ndarray         # (b, prompt+gen) canvas
+    steps: jnp.ndarray          # (b,) refinement iterations
+    n_model_calls: jnp.ndarray  # scalar, total forward passes
+    gen_lengths: jnp.ndarray    # (b,) tokens before EOS
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    prompt_len: int             # text prompt tokens in the canvas
+    gen_len: int
+    block_size: int
+    conf_threshold: float = 0.9
+    temperature: float = 0.0
+    early_stop: bool = True
+    cache_refresh_interval: int = 8
+    attn_impl: str = "auto"
+    pos_offset: int = 0         # prefix embeds (VLM patches) before canvas
+
+    @property
+    def n_blocks(self) -> int:
+        return self.gen_len // self.block_size
+
+    @property
+    def full_prompt_len(self) -> int:
+        return self.prompt_len + self.pos_offset
+
+
+def init_canvas(prompt_tokens, spec: SamplerSpec, cfg: ModelConfig):
+    b = prompt_tokens.shape[0]
+    gen = jnp.full((b, spec.gen_len), cfg.mask_token_id, prompt_tokens.dtype)
+    return jnp.concatenate([prompt_tokens, gen], axis=1)
+
+
+def _gen_lengths(tokens, spec: SamplerSpec, cfg: ModelConfig):
+    gen = tokens[:, spec.prompt_len:]
+    is_eos = gen == cfg.eos_token_id
+    has = jnp.any(is_eos, axis=-1)
+    first = jnp.argmax(is_eos, axis=-1)
+    return jnp.where(has, first, spec.gen_len)
+
+
+def _block_pos_mask(T: int, start: int, size: int):
+    pos = jnp.arange(T)
+    return (pos >= start) & (pos < start + size)
+
+
+def _full_logits(params, tokens, cfg, spec, mode, extras):
+    """Full forward over the canvas (+ prefix embeds); returns the model
+    output with logits/hidden sliced back to canvas coordinates."""
+    out = forward(params, tokens, cfg=cfg, mode=mode,
+                  prompt_len=spec.full_prompt_len, block_size=spec.block_size,
+                  attn_impl=spec.attn_impl, **extras)
+    if spec.pos_offset:
+        out = out._replace(logits=out.logits[:, spec.pos_offset:],
+                           hidden=out.hidden[:, spec.pos_offset:])
+    return out
+
+
+def _dec_extras(extras):
+    return {k: v for k, v in extras.items()
+            if k not in ("encoder_embeds", "prefix_embeds")}
+
+
+# ---------------------------------------------------------------------------
+# Full-recompute samplers (teacher-side)
+# ---------------------------------------------------------------------------
+def vanilla_blockwise(params, prompt_tokens, *, cfg: ModelConfig,
+                      spec: SamplerSpec, key=None, extras=None,
+                      record_hidden: bool = False):
+    """Alg. 1 teacher decoding: N = L_g steps, one token finalized per step.
+
+    With ``record_hidden`` also returns ``finalized_at`` (b, L_g) — the step
+    index at which each position was finalized (a compact, exact encoding of
+    the monotone trajectory T_x) — and the hidden buffer H (b, L_g, d)."""
+    extras = extras or {}
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tokens = init_canvas(prompt_tokens, spec, cfg)
+    b, T = tokens.shape
+    P, B, G = spec.prompt_len, spec.block_size, spec.gen_len
+    finalized_at = jnp.full((b, G), -1, jnp.int32)
+    hidden_buf = jnp.zeros((b, G, cfg.d_model), jnp.float32)
+    step_counter = 0
+
+    for blk in range(spec.n_blocks):
+        start = P + blk * B
+        bmask = _block_pos_mask(T, start, B)
+        for _ in range(B):
+            key, sub = jax.random.split(key)
+            out = _full_logits(params, tokens, cfg, spec,
+                               masks.BIDIRECTIONAL, extras)
+            cand, conf = D.confidence_and_candidates(
+                out.logits, tokens, cfg.mask_token_id, spec.temperature, sub)
+            sel = D.select_topk_in_block(conf, bmask[None, :], 1)
+            tokens = jnp.where(sel, cand.astype(tokens.dtype), tokens)
+            if record_hidden:
+                gen_sel = sel[:, P:]
+                finalized_at = jnp.where(gen_sel, step_counter, finalized_at)
+                hidden_buf = jnp.where(
+                    gen_sel[..., None], out.hidden[:, P:].astype(jnp.float32),
+                    hidden_buf)
+            step_counter += 1
+
+    steps = jnp.full((b,), step_counter, jnp.int32)
+    res = SampleResult(tokens, steps, jnp.asarray(step_counter, jnp.int32),
+                       _gen_lengths(tokens, spec, cfg))
+    if record_hidden:
+        return res, finalized_at, hidden_buf
+    return res
+
+
+def _threshold_update(tokens, logits_canvas, bmask, spec, cfg, key, active):
+    cand, conf = D.confidence_and_candidates(
+        logits_canvas, tokens, cfg.mask_token_id, spec.temperature, key)
+    sel = D.select_threshold_in_block(conf, bmask[None, :], spec.conf_threshold)
+    sel = sel & active[:, None]
+    return jnp.where(sel, cand.astype(tokens.dtype), tokens)
+
+
+def fast_dllm_parallel(params, prompt_tokens, *, cfg: ModelConfig,
+                       spec: SamplerSpec, key=None, extras=None):
+    """Fast-dLLM (Parallel): threshold finalization, full recompute."""
+    extras = extras or {}
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tokens = init_canvas(prompt_tokens, spec, cfg)
+    b, T = tokens.shape
+    P, B = spec.prompt_len, spec.block_size
+    steps = jnp.zeros((b,), jnp.int32)
+    calls = jnp.zeros((), jnp.int32)
+    done = jnp.zeros((b,), bool)
+
+    for blk in range(spec.n_blocks):
+        start = P + blk * B
+        bmask = _block_pos_mask(T, start, B)
+
+        def cond(st):
+            tokens, steps, calls, key, done, it = st
+            masked = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :]
+                             & ~done[:, None], axis=-1)
+            return jnp.any(masked) & (it < B)
+
+        def body(st):
+            tokens, steps, calls, key, done, it = st
+            key, sub = jax.random.split(key)
+            out = _full_logits(params, tokens, cfg, spec,
+                               masks.BIDIRECTIONAL, extras)
+            active = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :],
+                             axis=-1) & ~done
+            tokens = _threshold_update(tokens, out.logits, bmask, spec, cfg,
+                                       sub, active)
+            return (tokens, steps + active.astype(jnp.int32), calls + 1,
+                    key, done, it + 1)
+
+        tokens, steps, calls, key, done, _ = jax.lax.while_loop(
+            cond, body,
+            (tokens, steps, calls, key, done, jnp.zeros((), jnp.int32)))
+        if spec.early_stop:
+            done = done | jnp.any(
+                (tokens == cfg.eos_token_id) & bmask[None, :], -1)
+
+    return SampleResult(tokens, steps, calls, _gen_lengths(tokens, spec, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Approximate-cache samplers (training-free baselines)
+# ---------------------------------------------------------------------------
+def _refresh_cache(params, tokens, cfg, spec, kv_cache, extras):
+    """Full bidirectional forward; commit KV for every position."""
+    out = forward(params, tokens, cfg=cfg, mode=masks.BIDIRECTIONAL,
+                  prompt_len=spec.full_prompt_len, block_size=spec.block_size,
+                  attn_impl=spec.attn_impl, **extras)
+    return C.commit(kv_cache, out.emissions, 0)
+
+
+def _approx_cache_sampler(params, prompt_tokens, *, cfg, spec, key, extras,
+                          refresh_every_block: bool):
+    extras = extras or {}
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tokens = init_canvas(prompt_tokens, spec, cfg)
+    b, T = tokens.shape
+    P, B, off = spec.prompt_len, spec.block_size, spec.pos_offset
+    S = T + off
+    kv_cache = C.init_cache(cfg, b, S, dtype=cfg.dtype)
+    kv_cache = _refresh_cache(params, tokens, cfg, spec, kv_cache, extras)
+    steps = jnp.zeros((b,), jnp.int32)
+    calls = jnp.ones((), jnp.int32)
+    done = jnp.zeros((b,), bool)
+    R = spec.cache_refresh_interval
+    dx = _dec_extras(extras)
+
+    for blk in range(spec.n_blocks):
+        start = P + blk * B                  # canvas coords
+        astart = start + off                 # absolute sequence coords
+        bmask = _block_pos_mask(T, start, B)
+        # stale cache entries for the active block itself are invalid —
+        # fresh block KV is computed every step (dual-cache semantics).
+        cache_valid = ~_block_pos_mask(S, astart, B)
+
+        def block_out(tokens, kv_cache):
+            block_tokens = jax.lax.dynamic_slice_in_dim(tokens, start, B, 1)
+            return forward(params, block_tokens, cfg=cfg,
+                           mode=masks.BIDIRECTIONAL,
+                           prompt_len=spec.full_prompt_len, block_size=B,
+                           positions=astart + jnp.arange(B), cache=kv_cache,
+                           cache_len=astart, cache_valid=cache_valid,
+                           attn_impl=spec.attn_impl, **dx)
+
+        if refresh_every_block and blk > 0:
+            kv_cache = _refresh_cache(params, tokens, cfg, spec, kv_cache,
+                                      extras)
+            calls = calls + 1
+
+        def cond(st):
+            tokens, kv_cache, steps, calls, key, done, it = st
+            masked = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :]
+                             & ~done[:, None], axis=-1)
+            return jnp.any(masked) & (it < B)
+
+        def body(st):
+            tokens, kv_cache, steps, calls, key, done, it = st
+            key, sub = jax.random.split(key)
+            if not refresh_every_block:
+                kv_cache = jax.lax.cond(
+                    (it % R) == (R - 1),
+                    lambda c: _refresh_cache(params, tokens, cfg, spec, c,
+                                             extras),
+                    lambda c: c, kv_cache)
+            out = block_out(tokens, kv_cache)
+            logits_canvas = jnp.zeros((b, T, out.logits.shape[-1]),
+                                      out.logits.dtype)
+            logits_canvas = jax.lax.dynamic_update_slice_in_dim(
+                logits_canvas, out.logits, start, 1)
+            active = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :],
+                             axis=-1) & ~done
+            tokens = _threshold_update(tokens, logits_canvas, bmask, spec,
+                                       cfg, sub, active)
+            return (tokens, kv_cache, steps + active.astype(jnp.int32),
+                    calls + 1, key, done, it + 1)
+
+        tokens, kv_cache, steps, calls, key, done, _ = jax.lax.while_loop(
+            cond, body,
+            (tokens, kv_cache, steps, calls, key, done,
+             jnp.zeros((), jnp.int32)))
+        if spec.early_stop:
+            done = done | jnp.any(
+                (tokens == cfg.eos_token_id) & bmask[None, :], -1)
+
+    return SampleResult(tokens, steps, calls, _gen_lengths(tokens, spec, cfg))
+
+
+def dual_cache(params, prompt_tokens, *, cfg, spec, key=None, extras=None):
+    return _approx_cache_sampler(params, prompt_tokens, cfg=cfg, spec=spec,
+                                 key=key, extras=extras,
+                                 refresh_every_block=True)
+
+
+def interval_cache(params, prompt_tokens, *, cfg, spec, key=None, extras=None):
+    return _approx_cache_sampler(params, prompt_tokens, cfg=cfg, spec=spec,
+                                 key=key, extras=extras,
+                                 refresh_every_block=False)
+
+
+# ---------------------------------------------------------------------------
+# CDLM student decoding (paper §4.3) — exact block-causal cache
+# ---------------------------------------------------------------------------
+def cdlm(params, prompt_tokens, *, cfg: ModelConfig, spec: SamplerSpec,
+         key=None, extras=None, use_long_window: bool = False):
+    extras = extras or {}
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tokens = init_canvas(prompt_tokens, spec, cfg)
+    b, T = tokens.shape
+    P, B, off = spec.prompt_len, spec.block_size, spec.pos_offset
+    S = T + off
+    kv_cache = C.init_cache(cfg, b, S, dtype=cfg.dtype)
+    dx = _dec_extras(extras)
+
+    # ---- prefill: prompt (+ prefix embeds) under the block-causal mask ----
+    out = forward(params, tokens[:, :P], cfg=cfg, mode=masks.BLOCK_CAUSAL,
+                  prompt_len=spec.full_prompt_len, block_size=B,
+                  attn_impl=spec.attn_impl, **extras)
+    kv_cache = C.commit(kv_cache, out.emissions, 0)
+    calls = jnp.ones((), jnp.int32)
+    steps = jnp.zeros((b,), jnp.int32)
+    done = jnp.zeros((b,), bool)
+
+    for blk in range(spec.n_blocks):
+        start = P + blk * B
+        astart = start + off
+        bmask = _block_pos_mask(T, start, B)
+
+        def block_out(tokens, kv_cache):
+            block_tokens = jax.lax.dynamic_slice_in_dim(tokens, start, B, 1)
+            return forward(params, block_tokens, cfg=cfg,
+                           mode=masks.BLOCK_CAUSAL,
+                           prompt_len=spec.full_prompt_len, block_size=B,
+                           positions=astart + jnp.arange(B), cache=kv_cache,
+                           cache_len=astart, use_long_window=use_long_window,
+                           attn_impl=spec.attn_impl, **dx)
+
+        def cond(st):
+            tokens, steps, calls, key, done, it = st
+            masked = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :]
+                             & ~done[:, None], axis=-1)
+            return jnp.any(masked) & (it < B)
+
+        def body(st):
+            tokens, steps, calls, key, done, it = st
+            key, sub = jax.random.split(key)
+            out = block_out(tokens, kv_cache)
+            logits_canvas = jnp.zeros((b, T, out.logits.shape[-1]),
+                                      out.logits.dtype)
+            logits_canvas = jax.lax.dynamic_update_slice_in_dim(
+                logits_canvas, out.logits, start, 1)
+            active = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :],
+                             axis=-1) & ~done
+            tokens = _threshold_update(tokens, logits_canvas, bmask, spec,
+                                       cfg, sub, active)
+            return (tokens, steps + active.astype(jnp.int32), calls + 1, key,
+                    done, it + 1)
+
+        tokens, steps, calls, key, done, _ = jax.lax.while_loop(
+            cond, body,
+            (tokens, steps, calls, key, done, jnp.zeros((), jnp.int32)))
+
+        # ---- commit pass: recompute the finalized block's KV exactly ----
+        out = block_out(tokens, kv_cache)
+        kv_cache = C.commit(kv_cache, out.emissions, astart)
+        calls = calls + 1
+
+        if spec.early_stop:
+            done = done | jnp.any(
+                (tokens == cfg.eos_token_id) & bmask[None, :], -1)
+
+    return SampleResult(tokens, steps, calls, _gen_lengths(tokens, spec, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Autoregressive baseline (Fig. 3) — also the RWKV6 decode path
+# ---------------------------------------------------------------------------
+def ar(params, prompt_tokens, *, cfg: ModelConfig, spec: SamplerSpec,
+       key=None, extras=None):
+    extras = extras or {}
+    tokens = init_canvas(prompt_tokens, spec, cfg)
+    b, T = tokens.shape
+    P, off = spec.prompt_len, spec.pos_offset
+    S = T + off
+    kv_cache = C.init_cache(cfg, b, S, dtype=cfg.dtype)
+    out = forward(params, tokens[:, :P], cfg=cfg, mode=masks.CAUSAL,
+                  attn_impl=spec.attn_impl, **extras)
+    kv_cache = C.commit(kv_cache, out.emissions, 0)
+    last_logits = out.logits[:, -1]
+    dx = _dec_extras(extras)
+
+    def body(i, st):
+        tokens, kv_cache, last_logits, done, steps, calls = st
+        pos = P + i
+        nxt = jnp.argmax(last_logits, axis=-1).astype(tokens.dtype)
+        nxt = jnp.where(done, jnp.asarray(cfg.eos_token_id, tokens.dtype), nxt)
+        tokens = jax.lax.dynamic_update_slice(tokens, nxt[:, None], (0, pos))
+        steps = steps + (~done).astype(jnp.int32)
+        done = done | (nxt == cfg.eos_token_id)
+        out = forward(params, nxt[:, None], cfg=cfg, mode=masks.CAUSAL,
+                      positions=(pos + off)[None], cache=kv_cache,
+                      cache_len=pos + off, attn_impl=spec.attn_impl, **dx)
+        kv_cache = C.commit(kv_cache, out.emissions, pos + off)
+        return (tokens, kv_cache, out.logits[:, -1], done, steps, calls + 1)
+
+    done = jnp.zeros((b,), bool)
+    steps = jnp.zeros((b,), jnp.int32)
+    calls = jnp.ones((), jnp.int32)
+    tokens, kv_cache, last_logits, done, steps, calls = jax.lax.fori_loop(
+        0, spec.gen_len, body,
+        (tokens, kv_cache, last_logits, done, steps, calls))
+
+    return SampleResult(tokens, steps, calls, _gen_lengths(tokens, spec, cfg))
+
+
+SAMPLERS = {
+    "vanilla": vanilla_blockwise,
+    "fast_dllm": fast_dllm_parallel,
+    "dual_cache": dual_cache,
+    "interval_cache": interval_cache,
+    "cdlm": cdlm,
+    "ar": ar,
+}

@@ -6,7 +6,7 @@ the block-causal mask for the attention kernel.
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.block_attn import block_attention_ref, flash_block_attention
 from repro.kernels.decode_attn import decode_attention, decode_attention_ref
