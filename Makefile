@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-fast bench
+.PHONY: verify verify-fast bench bench-smoke lint
 
 # tier-1 suite (ROADMAP.md): must stay green
 verify:
@@ -14,3 +14,12 @@ verify-fast:
 
 bench:
 	$(PYTHON) -m benchmarks.run
+
+# CI-sized serving benchmark: random-init params, tiny trace; writes
+# BENCH_serving.json (uploaded as an artifact by the bench-smoke job)
+bench-smoke:
+	$(PYTHON) -m benchmarks.bench_serving --smoke --json BENCH_serving.json
+
+# requires ruff (pip install ruff); rules configured in pyproject.toml
+lint:
+	ruff check .

@@ -41,12 +41,12 @@ def main():
                        remat=False)
     teacher = trainer.train_teacher(cfg, corpus, tcfg, verbose=False)
 
-    print(f"[2/4] collecting teacher trajectories (Alg. 1)... "
+    print("[2/4] collecting teacher trajectories (Alg. 1)... "
           f"({time.time()-t0:.0f}s)")
     ds = trainer.collect_dataset(teacher, cfg, cdlm_cfg, corpus,
                                  n_examples=128, batch=64, verbose=False)
 
-    print(f"[3/4] distilling block-causal CDLM student (Alg. 2)... "
+    print("[3/4] distilling block-causal CDLM student (Alg. 2)... "
           f"({time.time()-t0:.0f}s)")
     scfg = dataclasses.replace(tcfg, steps=250, learning_rate=5e-4)
     student = trainer.train_student(teacher, ds, cfg, cdlm_cfg, scfg,

@@ -29,7 +29,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.configs.base import ServeConfig
-from repro.data.synthetic import score, verify
+from repro.data.synthetic import verify
 from repro.serving import Request, efficiency_report, make_engine
 
 

@@ -9,7 +9,6 @@ that extension is mechanical). ``restore`` needs a template tree (from
 from __future__ import annotations
 
 import os
-from typing import Any
 
 import jax
 import jax.numpy as jnp

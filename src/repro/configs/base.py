@@ -8,7 +8,7 @@ used as static args under jit. ``ModelConfig`` describes an architecture;
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -253,6 +253,14 @@ class ServeConfig:
     sampler: str = "cdlm"            # vanilla|fast_dllm|dual_cache|interval_cache|cdlm|ar
     cache_refresh_interval: int = 8  # for interval_cache (dLLM-Cache analog)
     scheduler: str = "static"        # static | continuous (block-level batching)
+    # KV memory layout (repro.core.cache.CACHE_LAYOUTS): "dense" preallocates
+    # max_len rows per lane; "paged" backs KV with a global page pool
+    # (page size = block_size) so lanes only consume memory they commit.
+    cache_layout: str = "dense"
+    # pool size in pages for the paged layout; None = dense-equivalent
+    # capacity (max_batch lanes x full canvas). Smaller pools trade peak
+    # concurrency for memory; the continuous scheduler admits by free pages.
+    page_pool_pages: Optional[int] = None
 
 
 @dataclass(frozen=True)

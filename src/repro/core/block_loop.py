@@ -64,6 +64,11 @@ class SamplerSpec:
     cache_refresh_interval: int = 8
     attn_impl: str = "auto"
     pos_offset: int = 0         # prefix embeds (VLM patches) before canvas
+    # KV memory layout (repro.core.cache.CACHE_LAYOUTS): "dense" per-lane
+    # buffers, or "paged" global page pool + per-lane page tables. Paged is
+    # only meaningful for the exact-commit policy (the approx policies
+    # refresh whole-canvas KV, so every page is live anyway).
+    cache_layout: str = "dense"
 
     @property
     def n_blocks(self) -> int:
@@ -170,6 +175,34 @@ def _refresh_cache(params, tokens, cfg, spec, kv_cache, extras):
     return C.commit(kv_cache, out.emissions, 0)
 
 
+def _commit_any(kv_cache, emissions, offset, b):
+    """Layout-agnostic whole-batch commit at a shared offset."""
+    if isinstance(kv_cache, C.PagedCache):
+        return C.commit_rows(kv_cache, emissions, offset,
+                             jnp.ones((b,), bool))
+    return C.commit(kv_cache, emissions, offset)
+
+
+def _init_exact_cache(cfg, b, S, spec: SamplerSpec):
+    """Exact-commit cache in the layout ``spec.cache_layout`` selects.
+
+    The paged variant allocates a dense-equivalent pool (every lane can back
+    its whole canvas) and assigns pages up front — the single-sequence loop
+    is the bit-equivalence harness for the layout; page-at-a-time admission
+    lives in the serving engine."""
+    if spec.cache_layout == C.DENSE:
+        return C.init_cache(cfg, b, S, dtype=cfg.dtype)
+    if spec.cache_layout != C.PAGED:
+        raise ValueError(f"unknown cache layout {spec.cache_layout!r} "
+                         f"(expected one of {C.CACHE_LAYOUTS})")
+    page = spec.block_size
+    n_tables = -(-S // page)
+    paged = C.init_paged_cache(cfg, b, n_tables * page, n_pages=b * n_tables,
+                               page_size=page, dtype=cfg.dtype)
+    paged, _ = C.alloc(paged, jnp.ones((b,), bool), 0, S)
+    return paged
+
+
 # ---------------------------------------------------------------------------
 # Finalization family: top1 (the teacher / trajectory collector)
 # ---------------------------------------------------------------------------
@@ -238,11 +271,11 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
         kv_cache = _refresh_cache(params, tokens, cfg, spec, kv_cache, extras)
         calls = jnp.ones((), jnp.int32)
     else:  # exact-commit: prefill prompt (+ prefix embeds) block-causally
-        kv_cache = C.init_cache(cfg, b, S, dtype=cfg.dtype)
+        kv_cache = _init_exact_cache(cfg, b, S, spec)
         out = forward(params, tokens[:, :P], cfg=cfg, mode=strategy.attn_mode,
                       prompt_len=spec.full_prompt_len, block_size=B,
                       attn_impl=spec.attn_impl, **extras)
-        kv_cache = C.commit(kv_cache, out.emissions, 0)
+        kv_cache = _commit_any(kv_cache, out.emissions, 0, b)
         calls = jnp.ones((), jnp.int32)
 
     for blk in range(spec.n_blocks):
@@ -308,7 +341,7 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
         if policy == "exact-commit":
             # commit pass: recompute the finalized block's KV exactly
             out = block_out(tokens, kv_cache)
-            kv_cache = C.commit(kv_cache, out.emissions, astart)
+            kv_cache = _commit_any(kv_cache, out.emissions, astart, b)
             calls = calls + 1
 
         if spec.early_stop:
@@ -371,6 +404,12 @@ def run_block_loop(params, prompt_tokens, *, cfg: ModelConfig,
     """
     extras = extras or {}
     key = key if key is not None else jax.random.PRNGKey(0)
+    if spec.cache_layout != C.DENSE and strategy.cache_policy != "exact-commit":
+        raise ValueError(
+            f"cache_layout={spec.cache_layout!r} requires the 'exact-commit' "
+            f"cache policy (strategy {strategy.name!r} uses "
+            f"{strategy.cache_policy!r}); approx/ar policies rewrite "
+            "whole-canvas KV, so paging buys nothing")
     if record_hidden and strategy.finalize != "top1":
         raise ValueError("record_hidden requires the 'top1' finalize rule "
                          f"(strategy {strategy.name!r} uses "
@@ -392,11 +431,14 @@ def run_block_loop(params, prompt_tokens, *, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 def lane_block_forward(params, tokens, starts, kv_cache, *, cfg: ModelConfig,
                        spec: SamplerSpec, extras=None,
-                       use_long_window: bool = False):
+                       use_long_window: bool = False,
+                       paged_attention_fn=None):
     """Block-causal cached forward where each lane decodes its own block.
 
     tokens: (b, T) canvases; starts: (b,) canvas coordinate of each lane's
-    active block; kv_cache: batch cache (leaves batched on axis 1).
+    active block; kv_cache: batch cache — either a dense tuple (leaves
+    batched on axis 1) or a :class:`repro.core.cache.PagedCache` (K/V pools
+    shared across lanes, page tables batched on axis 0).
     Returns ``(logits (b, B, V), emissions)`` with emissions batched on
     axis 1, ready for :func:`repro.core.cache.commit_rows`.
 
@@ -404,21 +446,47 @@ def lane_block_forward(params, tokens, starts, kv_cache, *, cfg: ModelConfig,
     its own committed cache rows and its own block, so mixing lanes at
     different block offsets in one batch is loss-free — this is what makes
     continuous block-level batching safe.
+
+    ``paged_attention_fn`` (paged cache only): a
+    ``kernels.decode_attn.paged_decode_attention``-shaped kernel that walks
+    the page table directly instead of the default dense-gather path (which
+    is bit-identical to the dense layout but materializes a per-lane dense
+    KV view).
     """
     B, off = spec.block_size, spec.pos_offset
     dx = _dec_extras(extras or {})
+    paged = isinstance(kv_cache, C.PagedCache)
+    if paged:
+        # pools are lane-shared (broadcast under vmap); per-lane state
+        # leaves ride on axis 1, the page table on axis 0
+        cache_axes = C.PagedCache(
+            slots=tuple({k: (None if k in ("k", "v") else 1) for k in slot}
+                        for slot in kv_cache.slots),
+            page_table=0, page_owner=None)
+    else:
+        cache_axes = 1
 
     def one(tok, start, cache_lane):
         astart = start + off
         block_tok = jax.lax.dynamic_slice(tok, (start,), (B,))[None]
-        cache1 = jax.tree_util.tree_map(lambda a: a[:, None], cache_lane)
+        if paged:
+            cache1 = tuple(
+                {k: (v if k in ("k", "v") else v[:, None])
+                 for k, v in slot.items()} for slot in cache_lane.slots)
+            pages1 = cache_lane.page_table[None]
+        else:
+            cache1 = jax.tree_util.tree_map(lambda a: a[:, None], cache_lane)
+            pages1 = None
         out = forward(params, block_tok, cfg=cfg, mode=masks.BLOCK_CAUSAL,
                       prompt_len=spec.full_prompt_len, block_size=B,
                       positions=astart + jnp.arange(B), cache=cache1,
-                      cache_len=astart, use_long_window=use_long_window,
+                      cache_len=astart, pages=pages1,
+                      paged_decode_attention_fn=(paged_attention_fn
+                                                 if paged else None),
+                      use_long_window=use_long_window,
                       attn_impl=spec.attn_impl, **dx)
         emissions = jax.tree_util.tree_map(lambda a: a[:, 0], out.emissions)
         return out.logits[0], emissions
 
-    return jax.vmap(one, in_axes=(0, 0, 1), out_axes=(0, 1))(
+    return jax.vmap(one, in_axes=(0, 0, cache_axes), out_axes=(0, 1))(
         tokens, starts, kv_cache)

@@ -17,16 +17,31 @@ KV always derives from finalized token values (the "commit pass").
 selected batch lanes (each at its own offset), so a serving scheduler can
 evict a finished sequence and admit a new one mid-flight without perturbing
 its neighbors — safe precisely because block-causal caching is exact.
+
+Two memory layouts, switched by ``CACHE_LAYOUTS``:
+
+- **dense** (:func:`init_cache`): every lane preallocates ``max_len`` KV
+  rows, so batch capacity is bound by the longest possible request.
+- **paged** (:func:`init_paged_cache`): KV lives in a global page pool of
+  ``(n_pages, page_size, n_kv, hd)`` pages shared by all lanes, plus a
+  per-lane page table mapping sequence-block index -> page. Page ``p`` of a
+  lane holds absolute positions ``[p*page_size, (p+1)*page_size)``; entries
+  are ``FREE`` (-1) until :func:`alloc` assigns a pool page. Lanes only
+  consume pages for positions they actually commit, so a pool of the same
+  byte budget sustains more concurrent lanes at mixed generation lengths.
+  SSM/RWKV state slots stay dense — they are O(1) per lane.
+
+``reset`` and ``commit_rows`` are polymorphic over both layouts, so the
+block-decode loop and the serving engines are layout-agnostic.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, RWKV, RWKV_CM, ModelConfig
-from repro.models import mamba as M
 from repro.models import rwkv6 as R
 
 
@@ -94,13 +109,20 @@ def _broadcast_rows(mask, leaf):
     return mask.reshape((1, -1) + (1,) * (leaf.ndim - 2))
 
 
-def reset(cache: tuple, rows) -> tuple:
+def reset(cache, rows):
     """Zero the selected batch lanes of every cache buffer.
 
     ``rows``: (b,) bool lane mask (or int lane indices). Neighboring lanes
     are untouched — the primitive that lets a serving scheduler recycle one
     finished lane while the rest of the batch keeps decoding.
+
+    Polymorphic: a :class:`PagedCache` releases the lanes' pages back to the
+    pool (stale page contents are never readable — every position below a
+    lane's ``cache_len`` is re-committed before it becomes visible) and
+    zeroes the dense per-lane state leaves.
     """
+    if isinstance(cache, PagedCache):
+        return free(cache, rows)
     batch = jax.tree_util.tree_leaves(cache)[0].shape[1]
     mask = _row_mask(rows, batch)
     return jax.tree_util.tree_map(
@@ -108,14 +130,19 @@ def reset(cache: tuple, rows) -> tuple:
                                jnp.zeros((), leaf.dtype), leaf), cache)
 
 
-def commit_rows(cache: tuple, emissions: tuple, offsets, rows) -> tuple:
+def commit_rows(cache, emissions: tuple, offsets, rows):
     """Per-lane :func:`commit`: write emissions only for the selected lanes,
     each at its own sequence ``offset``.
 
     ``offsets``: scalar or (b,) int — KV insert position per lane;
     ``rows``: (b,) bool lane mask (or int lane indices). Lanes outside
     ``rows`` keep their old cache contents bit-for-bit.
+
+    Polymorphic: a :class:`PagedCache` scatters KV through each lane's page
+    table instead of into per-lane dense rows.
     """
+    if isinstance(cache, PagedCache):
+        return _commit_rows_paged(cache, emissions, offsets, rows)
     batch = jax.tree_util.tree_leaves(cache)[0].shape[1]
     mask = _row_mask(rows, batch)
     offsets = jnp.broadcast_to(jnp.asarray(offsets, jnp.int32), (batch,))
@@ -143,3 +170,227 @@ def commit_rows(cache: tuple, emissions: tuple, offsets, rows) -> tuple:
 
 def cache_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(cache))
+
+
+# ---------------------------------------------------------------------------
+# Paged layout
+# ---------------------------------------------------------------------------
+DENSE = "dense"
+PAGED = "paged"
+CACHE_LAYOUTS = (DENSE, PAGED)
+
+FREE = -1  # sentinel for unallocated page-table entries / unowned pool pages
+
+
+class PagedCache(NamedTuple):
+    """Block-paged KV cache: a global page pool plus per-lane page tables.
+
+    ``slots`` mirrors the dense cache structure, except attention K/V leaves
+    are pools ``(np, n_pages, page_size, n_kv, hd)`` shared across lanes;
+    SSM/RWKV/shift leaves stay dense ``(np, b, ...)``.
+
+    ``page_table`` (b, n_tables) int32 maps a lane's sequence-block index to
+    a pool page (``FREE`` = unallocated); ``page_owner`` (n_pages,) int32
+    records which lane holds each pool page (``FREE`` = available) — the
+    allocator's free list and the occupancy report derive from it.
+    """
+    slots: tuple
+    page_table: jnp.ndarray
+    page_owner: jnp.ndarray
+
+    @property
+    def page_size(self) -> int:
+        for slot in self.slots:
+            if "k" in slot:
+                return slot["k"].shape[2]
+        raise ValueError("paged cache has no attention slots")
+
+    @property
+    def n_pages(self) -> int:
+        return self.page_owner.shape[0]
+
+    @property
+    def n_lanes(self) -> int:
+        return self.page_table.shape[0]
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     n_pages: int, page_size: int, dtype=None) -> PagedCache:
+    """Allocate a page pool sized independently of ``batch * max_len``.
+
+    ``max_len`` only bounds the per-lane page *table* width (tiny int32
+    rows); KV bytes scale with ``n_pages * page_size``, not with the longest
+    possible request.
+    """
+    if cfg.is_attention_free:
+        raise ValueError("paged layout needs attention KV; "
+                         f"{cfg.name} carries only O(1) recurrent state")
+    if cfg.is_encoder_decoder:
+        raise ValueError("paged layout does not support encoder-decoder "
+                         "cross-attention caches yet")
+    dt = jnp.dtype(dtype or cfg.dtype)
+    np_ = cfg.n_periods
+    n_tables = -(-max_len // page_size)
+    slots = []
+    for mixer, ffn in cfg.layer_period:
+        slot: dict = {}
+        if mixer in (ATTN, ATTN_LOCAL):
+            pool_shape = (np_, n_pages, page_size, cfg.n_kv_heads,
+                          cfg.head_dim)
+            slot["k"] = jnp.zeros(pool_shape, dt)
+            slot["v"] = jnp.zeros(pool_shape, dt)
+        elif mixer == MAMBA:
+            e = cfg.mamba_expand * cfg.d_model
+            slot["conv"] = jnp.zeros((np_, batch, cfg.mamba_d_conv - 1, e), dt)
+            slot["ssm"] = jnp.zeros((np_, batch, e, cfg.mamba_d_state),
+                                    jnp.float32)
+        elif mixer == RWKV:
+            H, hs = R.n_rwkv_heads(cfg), cfg.rwkv_head_size
+            slot["S"] = jnp.zeros((np_, batch, H, hs, hs), jnp.float32)
+            slot["tm_shift"] = jnp.zeros((np_, batch, cfg.d_model), dt)
+        if ffn == RWKV_CM:
+            slot["cm_shift"] = jnp.zeros((np_, batch, cfg.d_model), dt)
+        slots.append(slot)
+    return PagedCache(
+        slots=tuple(slots),
+        page_table=jnp.full((batch, n_tables), FREE, jnp.int32),
+        page_owner=jnp.full((n_pages,), FREE, jnp.int32))
+
+
+def pages_for_span(start: int, stop: int, page_size: int) -> int:
+    """Number of page-table slots covering absolute positions [start, stop)."""
+    if stop <= start:
+        return 0
+    return -(-stop // page_size) - start // page_size
+
+
+def alloc(paged: PagedCache, rows, starts, stops):
+    """Ensure pages covering ``[start, stop)`` are allocated per lane.
+
+    ``rows``: (b,) bool lane mask (or int indices); ``starts``/``stops``:
+    scalar or (b,) int32 absolute sequence positions. Pages are taken
+    lowest-index-first, lanes served in index order (lane order is the
+    scheduler's priority order, which keeps page-starved rounds
+    deadlock-free: lane 0's request is always served first).
+
+    Returns ``(paged, ok)`` where ``ok`` (b,) marks selected lanes whose
+    span is now fully backed by pages; a lane that could not get every page
+    it needed keeps its table row unchanged (all-or-nothing).
+    """
+    b = paged.n_lanes
+    n_pages = paged.n_pages
+    page = paged.page_size
+    mask = _row_mask(rows, b)
+    starts = jnp.broadcast_to(jnp.asarray(starts, jnp.int32), (b,))
+    stops = jnp.broadcast_to(jnp.asarray(stops, jnp.int32), (b,))
+    n_t = paged.page_table.shape[1]
+    tids = jnp.arange(n_t, dtype=jnp.int32)
+
+    def lane_step(owner, inp):
+        row, sel, start, stop, lane = inp
+        covers = (tids * page < stop) & ((tids + 1) * page > start)
+        need = covers & (row == FREE) & sel
+        free_mask = owner == FREE
+        ok = sel & (jnp.sum(need) <= jnp.sum(free_mask))
+        # stable list of free pages, lowest index first
+        pidx = jnp.arange(n_pages, dtype=jnp.int32)
+        freelist = jnp.argsort(jnp.where(free_mask, pidx, n_pages + pidx))
+        rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+        cand = freelist[jnp.clip(rank, 0, n_pages - 1)].astype(jnp.int32)
+        take = need & ok
+        row = jnp.where(take, cand, row)
+        # mark taken pages as owned (index n_pages = dropped no-op)
+        scatter_idx = jnp.where(take, cand, n_pages)
+        owner = owner.at[scatter_idx].set(lane, mode="drop")
+        return owner, (row, ok)
+
+    owner, (table, ok) = jax.lax.scan(
+        lane_step, paged.page_owner,
+        (paged.page_table, mask, starts, stops,
+         jnp.arange(b, dtype=jnp.int32)))
+    return paged._replace(page_table=table, page_owner=owner), ok
+
+
+def free(paged: PagedCache, rows) -> PagedCache:
+    """Release the selected lanes' pages back to the pool and zero their
+    dense per-lane state leaves. Pool page *contents* are left as-is: a page
+    is only readable below its new owner's ``cache_len``, and every such
+    position is re-committed first, so reuse is residue-free.
+    """
+    b = paged.n_lanes
+    mask = _row_mask(rows, b)
+    owned_by_freed = mask[jnp.clip(paged.page_owner, 0, b - 1)] \
+        & (paged.page_owner != FREE)
+    owner = jnp.where(owned_by_freed, FREE, paged.page_owner)
+    table = jnp.where(mask[:, None], FREE, paged.page_table)
+
+    def clear(leaf):
+        if leaf.ndim >= 2 and leaf.shape[1] == b:
+            return jnp.where(_broadcast_rows(mask, leaf),
+                             jnp.zeros((), leaf.dtype), leaf)
+        return leaf
+
+    slots = tuple(
+        {k: (v if k in ("k", "v") else clear(v)) for k, v in slot.items()}
+        for slot in paged.slots)
+    return paged._replace(slots=slots, page_table=table, page_owner=owner)
+
+
+def _commit_rows_paged(paged: PagedCache, emissions: tuple, offsets,
+                       rows) -> PagedCache:
+    """Paged :func:`commit_rows`: KV emissions are scattered through each
+    lane's page table (pages must already be allocated via :func:`alloc`);
+    dense state emissions replace the old state on the selected lanes."""
+    b = paged.n_lanes
+    page = paged.page_size
+    n_pages = paged.n_pages
+    mask = _row_mask(rows, b)
+    offsets = jnp.broadcast_to(jnp.asarray(offsets, jnp.int32), (b,))
+
+    def write_kv(pool, val):
+        Lb = val.shape[2]
+        pos = offsets[:, None] + jnp.arange(Lb, dtype=jnp.int32)[None, :]
+        tbl_idx = jnp.clip(pos // page, 0, paged.page_table.shape[1] - 1)
+        pid = jnp.take_along_axis(paged.page_table, tbl_idx, axis=1)
+        sin = pos % page
+        # route non-selected lanes (and unallocated pages) out of bounds so
+        # the scatter drops them
+        pid = jnp.where(mask[:, None] & (pid != FREE), pid, n_pages)
+        # val (np, b, Lb, kv, hd) scatters into pool (np, n_pages, page, kv, hd)
+        return pool.at[:, pid, sin].set(val.astype(pool.dtype), mode="drop")
+
+    new_slots = []
+    for cslot, eslot in zip(paged.slots, emissions):
+        ns = dict(cslot)
+        for key, val in eslot.items():
+            if key in ("k", "v"):
+                ns[key] = write_kv(cslot[key], val)
+            elif key in cslot:
+                old = cslot[key]
+                ns[key] = jnp.where(_broadcast_rows(mask, old),
+                                    val.astype(old.dtype), old)
+        new_slots.append(ns)
+    return paged._replace(slots=tuple(new_slots))
+
+
+def gather_dense(paged: PagedCache) -> tuple:
+    """Materialize the dense-layout view of a paged cache: K/V pools are
+    gathered through the page tables into ``(np, b, n_tables*page, kv, hd)``
+    buffers. Positions backed by unallocated pages hold arbitrary bytes —
+    they are only compared/read below ``cache_len``. Test/debug helper; the
+    decode path gathers lazily inside the attention slot instead."""
+    table = jnp.clip(paged.page_table, 0, paged.n_pages - 1)
+    b, n_t = paged.page_table.shape
+
+    def view(pool):
+        g = pool[:, table]                       # (np, b, n_t, page, kv, hd)
+        return g.reshape(g.shape[0], b, n_t * paged.page_size,
+                         *g.shape[4:])
+
+    return tuple(
+        {k: (view(v) if k in ("k", "v") else v) for k, v in slot.items()}
+        for slot in paged.slots)
+
+
+def free_page_count(paged: PagedCache) -> jnp.ndarray:
+    return jnp.sum(paged.page_owner == FREE)

@@ -7,7 +7,7 @@ predictive distribution ``q_{0|t}``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

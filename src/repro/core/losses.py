@@ -13,8 +13,6 @@ All three losses operate on per-position logits and boolean position masks:
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -12,11 +12,10 @@ alternative to storing |V|-dim logits).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import CDLMConfig, ModelConfig
 from repro.core.sampler import SamplerSpec, vanilla_blockwise

@@ -19,7 +19,7 @@ ids 10..(10+range); specials below 10.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

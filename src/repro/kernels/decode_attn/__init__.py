@@ -1,3 +1,13 @@
-from repro.kernels.decode_attn.decode_attn import decode_attention_partial  # noqa: F401
-from repro.kernels.decode_attn.ops import decode_attention, softmax_combine  # noqa: F401
-from repro.kernels.decode_attn.ref import decode_attention_ref  # noqa: F401
+from repro.kernels.decode_attn.decode_attn import (  # noqa: F401
+    decode_attention_partial,
+    paged_decode_attention_partial,
+)
+from repro.kernels.decode_attn.ops import (  # noqa: F401
+    decode_attention,
+    paged_decode_attention,
+    softmax_combine,
+)
+from repro.kernels.decode_attn.ref import (  # noqa: F401
+    decode_attention_ref,
+    paged_decode_attention_ref,
+)

@@ -1,5 +1,9 @@
 """Jit'd wrapper: full CDLM decode-step attention = kernel partials over the
-cache ⊕ in-block bidirectional part, combined by online-softmax merge."""
+cache ⊕ in-block bidirectional part, combined by online-softmax merge.
+
+``decode_attention`` reads a dense per-lane cache; ``paged_decode_attention``
+reads a block-paged pool through per-lane page tables (and takes *per-lane*
+cache lengths, since paged decode serves lanes at mixed block offsets)."""
 from __future__ import annotations
 
 import functools
@@ -8,7 +12,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attn.decode_attn import NEG_INF, decode_attention_partial
+from repro.kernels.decode_attn.decode_attn import (
+    NEG_INF,
+    decode_attention_partial,
+    paged_decode_attention_partial,
+)
 
 
 def softmax_combine(parts):
@@ -68,5 +76,40 @@ def decode_attention(q, k_cache, v_cache, k_blk, v_blk, cache_len, *,
         g=G, block_k=block_k, interpret=interpret)
     blk_part = _block_partial(qf, kbf, vbf, scale=scale, softcap=softcap,
                               window=window, g=G)
+    out = softmax_combine([cache_part, blk_part])
+    return out.reshape(b, Kv, Bq, G, hd).transpose(0, 2, 1, 3, 4)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "softcap", "window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, k_blk, v_blk, page_table,
+                           cache_lens, *, scale: float = 1.0,
+                           softcap: Optional[float] = None,
+                           window: Optional[int] = None,
+                           interpret: bool = True):
+    """Model-layout decode attention over a block-paged KV pool.
+
+    q: (b, Bq, Kv, G, hd); k/v_pages: (n_pages, page, Kv, hd) pools shared
+    across lanes; k/v_blk: (b, Bq, Kv, hd) fresh in-block KV;
+    page_table: (b, n_tables) int32 (-1 = unallocated); cache_lens: scalar
+    or (b,) int32 — per-lane valid cache prefix. Returns (b, Bq, Kv, G, hd).
+    """
+    b, Bq, Kv, G, hd = q.shape
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(b, Kv, Bq * G, hd)
+    kp = k_pages.transpose(2, 0, 1, 3)        # (Kv, n_pages, page, hd)
+    vp = v_pages.transpose(2, 0, 1, 3)
+    kbf = k_blk.transpose(0, 2, 1, 3).reshape(b * Kv, Bq, hd)
+    vbf = v_blk.transpose(0, 2, 1, 3).reshape(b * Kv, Bq, hd)
+
+    acc, m, l = paged_decode_attention_partial(
+        qf, kp, vp, page_table, cache_lens, scale=scale, softcap=softcap,
+        window=window, g=G, interpret=interpret)
+    cache_part = (acc.reshape(b * Kv, Bq * G, hd),
+                  m.reshape(b * Kv, Bq * G, 1),
+                  l.reshape(b * Kv, Bq * G, 1))
+    blk_part = _block_partial(qf.reshape(b * Kv, Bq * G, hd), kbf, vbf,
+                              scale=scale, softcap=softcap, window=window,
+                              g=G)
     out = softmax_combine([cache_part, blk_part])
     return out.reshape(b, Kv, Bq, G, hd).transpose(0, 2, 1, 3, 4)

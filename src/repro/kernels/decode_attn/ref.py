@@ -35,3 +35,29 @@ def decode_attention_ref(q, k_cache, v_cache, k_blk, v_blk, cache_len, *,
     s = jnp.where(vis[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgqs,bskh->bqkgh", p, v_all.astype(jnp.float32))
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, k_blk, v_blk, page_table,
+                               cache_lens, *, scale: float = 1.0,
+                               softcap: Optional[float] = None,
+                               window: Optional[int] = None):
+    """Oracle for the paged kernel: gather each lane's pages into a dense
+    per-lane cache, then reuse the dense oracle lane by lane (per-lane
+    ``cache_lens`` — lanes decode at different block offsets).
+
+    q: (b, Bq, Kv, G, hd); pools: (n_pages, page, Kv, hd);
+    page_table: (b, n_tables); cache_lens: scalar or (b,) int32."""
+    b = q.shape[0]
+    n_pages, page = k_pages.shape[0], k_pages.shape[1]
+    n_t = page_table.shape[1]
+    lens = jnp.broadcast_to(jnp.asarray(cache_lens, jnp.int32), (b,))
+    tbl = jnp.clip(page_table, 0, n_pages - 1)
+    kc = k_pages[tbl].reshape(b, n_t * page, *k_pages.shape[2:])
+    vc = v_pages[tbl].reshape(b, n_t * page, *v_pages.shape[2:])
+    outs = [
+        decode_attention_ref(q[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                             k_blk[i:i + 1], v_blk[i:i + 1], lens[i],
+                             scale=scale, softcap=softcap, window=window)
+        for i in range(b)
+    ]
+    return jnp.concatenate(outs, axis=0)

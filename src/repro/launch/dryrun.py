@@ -68,7 +68,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         if mem:
             print(f"  memory_analysis/chip: temp={mem['temp_bytes']/2**30:.2f}GiB "
                   f"args={mem['argument_bytes']/2**30:.2f}GiB "
-                  f"(HBM/chip: 16GiB)")
+                  "(HBM/chip: 16GiB)")
         print(f"  cost: {rec['hlo_flops']:.3e} FLOPs, "
               f"{rec['hlo_bytes']:.3e} B accessed, "
               f"{rec['coll_bytes']:.3e} B collectives "

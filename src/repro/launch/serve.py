@@ -20,12 +20,28 @@ def main():
                     choices=["static", "continuous"],
                     help="continuous = slot-based block-level batching "
                          "(cdlm only)")
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="KV memory layout: dense per-lane buffers, or a "
+                         "global page pool + per-lane page tables "
+                         "(page size = block size)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="paged layout: page-pool size in pages "
+                         "(default: dense-equivalent capacity)")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="paged + continuous only: decode through the "
+                         "Pallas page-table flash-decode kernel instead of "
+                         "the bit-exact gather path (interpret mode on CPU)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--threshold", type=float, default=0.9)
     ap.add_argument("--ckpt", default=None,
                     help="npz checkpoint (defaults to cached bench assets)")
     args = ap.parse_args()
+    if args.paged_kernel and (args.scheduler != "continuous"
+                              or args.cache_layout != "paged"):
+        ap.error("--paged-kernel requires --scheduler continuous "
+                 "--cache-layout paged")
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__),
                                     "..", "..", ".."))
@@ -48,9 +64,12 @@ def main():
                         gen_length=common.TASK.gen_len,
                         sampler=args.sampler,
                         conf_threshold=args.threshold,
-                        scheduler=args.scheduler)
+                        scheduler=args.scheduler,
+                        cache_layout=args.cache_layout,
+                        page_pool_pages=args.pool_pages)
+    kw = {"use_paged_kernel": True} if args.paged_kernel else {}
     eng = make_engine(params, common.CFG, serve,
-                      prompt_len=common.TASK.prompt_len)
+                      prompt_len=common.TASK.prompt_len, **kw)
     ev = common.corpus().eval_batch(args.requests)
     reqs = [Request(prompt=p, id=i) for i, p in enumerate(ev["prompt"])]
     eng.warmup()
@@ -64,6 +83,12 @@ def main():
     print(f"{args.sampler}/{args.scheduler}: TPS={tps:.0f} "
           f"latency={rep['latency_s']*1e3:.1f}ms steps={rep['steps']:.1f} "
           f"gen_len={rep['gen_length']:.1f}  ({len(resp)} requests)")
+    if args.cache_layout == "paged" and args.scheduler == "continuous":
+        ps = eng.page_pool_stats()
+        print(f"page pool: {ps['peak_pages']:.0f}/{ps['n_pages']:.0f} pages "
+              f"peak ({ps['peak_occupancy']:.0%}), "
+              f"{ps['preemptions']:.0f} preemptions, "
+              f"{ps['stall_rounds']:.0f} stall rounds")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,6 @@ ever materialized.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -26,11 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import (
-    ATTN,
-    ATTN_LOCAL,
     INPUT_SHAPES,
-    MAMBA,
-    RWKV,
     CDLMConfig,
     ModelConfig,
     TrainConfig,
@@ -41,7 +36,6 @@ from repro.models import forward, init_model
 from repro.optim import adamw
 from repro.parallel import (
     batch_axes,
-    cache_spec,
     make_sharded_decode_attention,
     param_specs,
 )
@@ -270,7 +264,6 @@ def _decode_plan(cfg: ModelConfig, mesh, shape, *, fsdp: bool = True,
         lambda s: _named(mesh, s), param_specs(params, mesh, fsdp=fsdp))
 
     # attention-free archs carry O(1) state, no (b, S, kv, hd) buffers
-    cache_len_max = S
     cache_abs = abstract_cache(cfg, b, 0 if cfg.is_attention_free else S)
     # long-context always seq-shards the cache; decode_32k seq-shards only
     # under the --seq-parallel-decode §Perf variant

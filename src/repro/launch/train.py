@@ -11,8 +11,6 @@ the production-mesh proof of every arch × shape).
 """
 import argparse
 import dataclasses
-import os
-import sys
 
 
 def main():

@@ -9,7 +9,7 @@ unchanged and is exactly equivalent.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,7 @@ is why long_500k is trivial for this arch.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

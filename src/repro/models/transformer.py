@@ -104,6 +104,18 @@ def init_model(key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # Slot application
 # ---------------------------------------------------------------------------
+def _gather_pages(pool, table):
+    """Dense per-lane view of a KV page pool.
+
+    pool: (n_pages, page, kv, hd); table: (b, n_tables) int32 page ids
+    (-1 = unallocated). Returns (b, n_tables*page, kv, hd). Unallocated
+    entries gather an arbitrary page — those positions are always >=
+    ``cache_len`` and masked out of the attention bias."""
+    b, n_t = table.shape
+    g = pool[jnp.clip(table, 0, pool.shape[0] - 1)]
+    return g.reshape(b, n_t * pool.shape[1], *pool.shape[2:])
+
+
 def _self_attention_slot(slot, x, *, cfg: ModelConfig, mixer: str, ctx):
     """Returns (y, emission)."""
     h = L.apply_norm(slot["norm1"], x, cfg)
@@ -121,10 +133,19 @@ def _self_attention_slot(slot, x, *, cfg: ModelConfig, mixer: str, ctx):
 
     emission = {"k": k, "v": v}
     cache = ctx["cache_slot"]
+    pages = ctx.get("pages")
     scale = L.attn_scale(cfg)
     cap = cfg.attn_logit_softcap
 
-    if (cache is not None and "k" in cache
+    if (cache is not None and "k" in cache and pages is not None
+            and ctx.get("paged_decode_attention_fn") is not None
+            and ctx.get("cache_valid") is None):
+        # paged flash-decode: the kernel walks the page table directly, no
+        # dense gather is materialized
+        out = ctx["paged_decode_attention_fn"](
+            q, cache["k"], cache["v"], k, v, pages, ctx["cache_len"],
+            scale=scale, softcap=cap, window=window)
+    elif (cache is not None and "k" in cache and pages is None
             and ctx.get("decode_attention_fn") is not None
             and ctx.get("cache_valid") is None):
         # pluggable decode path: Pallas flash-decode kernel or the
@@ -134,11 +155,19 @@ def _self_attention_slot(slot, x, *, cfg: ModelConfig, mixer: str, ctx):
             softcap=cap, window=window)
     else:
         if cache is not None and "k" in cache:
-            S = cache["k"].shape[1]
-            k_all = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)],
-                                    axis=1)
-            v_all = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)],
-                                    axis=1)
+            if pages is not None:
+                # paged layout: cache["k"]/["v"] are page pools
+                # (n_pages, page, kv, hd); gather the lanes' pages into the
+                # dense view, then the math below is bit-identical to the
+                # dense layout (invalid positions are masked the same way,
+                # so residual page contents never reach the output).
+                ck, cv = _gather_pages(cache["k"], pages), \
+                    _gather_pages(cache["v"], pages)
+            else:
+                ck, cv = cache["k"], cache["v"]
+            S = ck.shape[1]
+            k_all = jnp.concatenate([ck, k.astype(ck.dtype)], axis=1)
+            v_all = jnp.concatenate([cv, v.astype(cv.dtype)], axis=1)
             kv_pos = jnp.concatenate([jnp.arange(S), jnp.asarray(ctx["q_pos"])])
             if ctx.get("cache_valid") is not None:
                 cache_ok = ctx["cache_valid"]
@@ -308,10 +337,12 @@ def forward(
     cache=None,
     cache_len=None,
     cache_valid=None,
+    pages=None,
     use_long_window: bool = False,
     attn_impl: str = "auto",
     attention_fn=None,
     decode_attention_fn=None,
+    paged_decode_attention_fn=None,
     remat: bool = False,
     unroll_layers: bool = False,
     logits_slice: Optional[Tuple[int, int]] = None,
@@ -324,9 +355,18 @@ def forward(
     embeddings — they are part of the prompt for masking purposes.
     ``encoder_embeds`` (b, enc_len, d): whisper frame embeddings (stub conv
     frontend) consumed by the encoder. ``cache``/``cache_len``: decode.
+    ``pages`` (b, n_tables) int32: page tables for a block-paged cache —
+    when given, attention K/V cache leaves are interpreted as page pools
+    (``repro.core.cache.PagedCache.slots``) instead of per-lane buffers.
     """
     if attention_fn is None:
         attention_fn = L.attention_core
+    # accept a repro.core.cache.PagedCache directly (duck-typed to avoid a
+    # models <-> core import cycle): unpack pool slots + page tables
+    if cache is not None and hasattr(cache, "page_table") \
+            and hasattr(cache, "slots"):
+        pages = cache.page_table if pages is None else pages
+        cache = cache.slots
 
     if inputs_embeds is not None:
         x = inputs_embeds
@@ -365,8 +405,10 @@ def forward(
     ctx = dict(
         mode=mode, prompt_len=prompt_len, block_size=block_size,
         q_pos=positions, cache_len=cache_len, cache_valid=cache_valid,
-        cache_slot=None, use_long_window=use_long_window, attn_impl=attn_impl,
-        attention_fn=attention_fn, decode_attention_fn=decode_attention_fn,
+        pages=pages, cache_slot=None, use_long_window=use_long_window,
+        attn_impl=attn_impl, attention_fn=attention_fn,
+        decode_attention_fn=decode_attention_fn,
+        paged_decode_attention_fn=paged_decode_attention_fn,
         encoder_out=encoder_out, rwkv_state=None,
         # decode steps (cache present) default to dropless MoE so cached
         # inference is exact; training/prefill keep capacity dropping.

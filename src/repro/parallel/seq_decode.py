@@ -13,9 +13,6 @@ Plugs into ``models.transformer.forward(decode_attention_fn=...)``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 

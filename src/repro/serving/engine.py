@@ -19,6 +19,22 @@ Two schedulers over the unified block-decode core
   Block-causal cache exactness makes lane recycling loss-free, so a lane
   admitted mid-flight decodes bit-identically to one decoded in isolation.
 
+The continuous engine runs over either KV layout
+(``ServeConfig.cache_layout``):
+
+- ``dense``: per-lane ``max_len`` KV rows — admission is slot-bound.
+- ``paged``: a global page pool (page size = block size) with per-lane page
+  tables (:class:`repro.core.cache.PagedCache`). Admission is *page*-bound:
+  a request is admitted whenever pages for its prompt and next block exist
+  (no whole-sequence reservation), each block boundary allocates just the
+  pages the live lanes' next blocks need, and eviction returns a lane's
+  pages to the pool. Lanes that cannot get their next page stall for a
+  round; if every live lane stalls, the youngest lane is preempted (pages
+  freed, request requeued — loss-free, since re-decoding from scratch is
+  deterministic). A pool holding one full canvas is the deadlock-free
+  minimum; sizing it below ``max_batch`` full canvases is what buys
+  higher concurrency per HBM byte at mixed generation lengths.
+
 Metrics follow the paper (Tables 1–2): per-request latency, TPS (valid
 tokens / wall-clock), refinement steps, generation length. The continuous
 engine reports true per-request latency (arrival → completion, queueing
@@ -87,6 +103,12 @@ class Engine:
     def __init__(self, params, cfg: ModelConfig, serve: ServeConfig,
                  prompt_len: int, *, pos_offset: int = 0,
                  use_long_window: bool = False):
+        if serve.page_pool_pages is not None:
+            raise ValueError(
+                "page_pool_pages is only honored by the continuous "
+                "scheduler with the paged layout; the static engine runs "
+                "whole sequences to completion, so its paged pool is "
+                "always sized dense-equivalent (batch x full canvas)")
         self.params = params
         self.cfg = cfg
         self.serve = serve
@@ -95,7 +117,7 @@ class Engine:
             block_size=serve.block_size, conf_threshold=serve.conf_threshold,
             temperature=serve.temperature,
             cache_refresh_interval=serve.cache_refresh_interval,
-            pos_offset=pos_offset)
+            pos_offset=pos_offset, cache_layout=serve.cache_layout)
         sampler = SAMPLERS[serve.sampler]
         kwargs = {}
         if serve.sampler == "cdlm" and use_long_window:
@@ -179,11 +201,14 @@ class ContinuousEngine:
     """
 
     def __init__(self, params, cfg: ModelConfig, serve: ServeConfig,
-                 prompt_len: int, *, use_long_window: bool = False):
+                 prompt_len: int, *, use_long_window: bool = False,
+                 use_paged_kernel: bool = False):
         if serve.sampler != "cdlm":
             raise ValueError(
                 "ContinuousEngine requires the 'cdlm' strategy (exact "
                 f"block-causal cache); got sampler={serve.sampler!r}")
+        if use_paged_kernel and serve.cache_layout != C.PAGED:
+            raise ValueError("use_paged_kernel requires cache_layout='paged'")
         if cfg.is_encoder_decoder:
             raise ValueError("ContinuousEngine does not support "
                              "encoder-decoder models yet (per-lane encoder "
@@ -196,28 +221,75 @@ class ContinuousEngine:
             raise ValueError("ContinuousEngine currently supports greedy "
                              "decoding only (temperature=0); got "
                              f"temperature={serve.temperature}")
+        if serve.cache_layout not in C.CACHE_LAYOUTS:
+            raise ValueError(f"unknown cache layout {serve.cache_layout!r} "
+                             f"(expected one of {C.CACHE_LAYOUTS})")
+        if (serve.cache_layout != C.PAGED
+                and serve.page_pool_pages is not None):
+            raise ValueError("page_pool_pages requires cache_layout='paged' "
+                             "— the dense layout preallocates per-lane "
+                             "buffers and would silently ignore the budget")
         self.params = params
         self.cfg = cfg
         self.serve = serve
         self.spec = SamplerSpec(
             prompt_len=prompt_len, gen_len=serve.gen_length,
             block_size=serve.block_size, conf_threshold=serve.conf_threshold,
-            temperature=serve.temperature, early_stop=True)
+            temperature=serve.temperature, early_stop=True,
+            cache_layout=serve.cache_layout)
         self.n_lanes = serve.max_batch
+        self.paged = serve.cache_layout == C.PAGED
+        P, B = prompt_len, serve.block_size
+        T = prompt_len + serve.gen_length
+        if self.paged:
+            self._n_tables = -(-T // B)
+            self.n_pages = (serve.page_pool_pages
+                            if serve.page_pool_pages is not None
+                            else self.n_lanes * self._n_tables)
+            if self.n_pages < self._n_tables:
+                raise ValueError(
+                    f"page pool of {self.n_pages} pages cannot back one "
+                    f"full request ({self._n_tables} pages of {B} tokens "
+                    f"for prompt {P} + gen {serve.gen_length}) — this is "
+                    "the deadlock-free minimum")
+            # pages a fresh request needs at admission: prompt + first block
+            self._admit_pages = C.pages_for_span(0, P + B, B)
+        else:
+            self.n_pages = 0
         self._use_long_window = use_long_window
+        # opt-in Pallas flash-decode over the page table (TPU hot path;
+        # interpret-mode on CPU — numerically equal to the gather path to
+        # fp32 tolerance, not bit-equal, since reduction order differs)
+        self._paged_attention_fn = None
+        if use_paged_kernel:
+            from repro.kernels.decode_attn import paged_decode_attention
+            self._paged_attention_fn = paged_decode_attention
         self._jit_admit = jax.jit(self._admit)
         self._jit_decode_block = jax.jit(self._decode_block)
+        self._jit_evict = jax.jit(self._evict)
+        self._jit_alloc_block = jax.jit(self._alloc_block)
         self._jit_gen_lengths = jax.jit(
             lambda tokens: _gen_lengths(tokens, self.spec, self.cfg))
         self._warm = False
+        self._pool_samples: List[int] = []
+        self._live_samples: List[int] = []
+        self._preemptions = 0
+        self._stall_rounds = 0
 
     # -- jitted state transitions -------------------------------------------
     def _init_state(self, key) -> _SlotState:
         N = self.n_lanes
         T = self.spec.prompt_len + self.spec.gen_len
+        if self.paged:
+            cache = C.init_paged_cache(
+                self.cfg, N, self._n_tables * self.spec.block_size,
+                n_pages=self.n_pages, page_size=self.spec.block_size,
+                dtype=self.cfg.dtype)
+        else:
+            cache = C.init_cache(self.cfg, N, T, dtype=self.cfg.dtype)
         return _SlotState(
             tokens=jnp.full((N, T), self.cfg.mask_token_id, jnp.int32),
-            cache=C.init_cache(self.cfg, N, T, dtype=self.cfg.dtype),
+            cache=cache,
             blk=jnp.zeros((N,), jnp.int32),
             lane_nblocks=jnp.full((N,), self.spec.n_blocks, jnp.int32),
             live=jnp.zeros((N,), bool),
@@ -225,14 +297,23 @@ class ContinuousEngine:
             calls=jnp.zeros((), jnp.int32),
             key=key)
 
-    def _admit(self, params, state: _SlotState, prompts, admit,
-               nblocks) -> _SlotState:
-        """Admit requests into freed lanes: write canvases, reset cache rows,
-        prefill prompts under the block-causal mask, commit into those rows."""
+    def _admit(self, params, state: _SlotState, prompts, admit, nblocks):
+        """Admit requests into freed lanes: write canvases, reset cache rows
+        (paged: allocate prompt + first-block pages), prefill prompts under
+        the block-causal mask, commit into those rows.
+
+        Returns ``(state, ok)`` — ``ok`` is the admitted-lane mask that got
+        its pages (always the admit mask itself for the dense layout; the
+        host only admits within the free-page budget, so a False is a
+        scheduler bug and is asserted on the host side)."""
         spec, cfg = self.spec, self.cfg
         canvas = init_canvas(prompts, spec, cfg)
         tokens = jnp.where(admit[:, None], canvas, state.tokens)
         cache = C.reset(state.cache, admit)
+        ok = admit
+        if self.paged:
+            cache, ok = C.alloc(cache, admit, 0,
+                                spec.prompt_len + spec.block_size)
         out = forward(params, tokens[:, :spec.prompt_len], cfg=cfg,
                       mode=masks.BLOCK_CAUSAL, prompt_len=spec.full_prompt_len,
                       block_size=spec.block_size, attn_impl=spec.attn_impl)
@@ -243,15 +324,32 @@ class ContinuousEngine:
             lane_nblocks=jnp.where(admit, nblocks, state.lane_nblocks),
             live=state.live | admit,
             steps=jnp.where(admit, 0, state.steps),
-            calls=state.calls + 1)
+            calls=state.calls + 1), ok
 
-    def _decode_block(self, params, state: _SlotState) -> _SlotState:
-        """Advance every live lane by one block: threshold refinement to
-        completion, then the exact commit pass into each lane's cache rows."""
+    def _evict(self, state: _SlotState, rows) -> _SlotState:
+        """Release lanes: mark dead and reset their cache (paged: return
+        their pages to the pool)."""
+        return state._replace(cache=C.reset(state.cache, rows),
+                              live=state.live & ~rows)
+
+    def _alloc_block(self, state: _SlotState):
+        """Paged: ensure every live lane has pages for its current block.
+        Returns ``(state, ok)``; a live lane with ``ok=False`` stalls this
+        round (its table is untouched — all-or-nothing per lane)."""
+        spec = self.spec
+        P, B = spec.prompt_len, spec.block_size
+        starts = P + jnp.clip(state.blk, 0, spec.n_blocks - 1) * B
+        cache, ok = C.alloc(state.cache, state.live, starts, starts + B)
+        return state._replace(cache=cache), ok
+
+    def _decode_block(self, params, state: _SlotState, run) -> _SlotState:
+        """Advance lanes selected by ``run`` by one block: threshold
+        refinement to completion, then the exact commit pass into each
+        lane's cache rows. Live lanes outside ``run`` (page-stalled) are
+        left untouched and retry at the next boundary."""
         spec, cfg = self.spec, self.cfg
         P, B = spec.prompt_len, spec.block_size
-        N = self.n_lanes
-        live = state.live
+        live = state.live & run
         starts = P + jnp.clip(state.blk, 0, spec.n_blocks - 1) * B
 
         def slice_blocks(tokens):
@@ -277,7 +375,8 @@ class ContinuousEngine:
             key, sub = jax.random.split(key)
             logits, _ = lane_block_forward(
                 params, tokens, starts, state.cache, cfg=cfg, spec=spec,
-                use_long_window=self._use_long_window)
+                use_long_window=self._use_long_window,
+                paged_attention_fn=self._paged_attention_fn)
             bt = slice_blocks(tokens)
             cand, conf = D.confidence_and_candidates(
                 logits, bt, cfg.mask_token_id, spec.temperature, sub)
@@ -295,10 +394,11 @@ class ContinuousEngine:
              jnp.zeros((), jnp.int32)))
 
         # commit pass: recompute the finalized blocks' KV exactly, only for
-        # live lanes, each at its own offset
+        # the lanes that ran, each at its own offset
         _, emissions = lane_block_forward(
             params, tokens, starts, state.cache, cfg=cfg, spec=spec,
-            use_long_window=self._use_long_window)
+            use_long_window=self._use_long_window,
+            paged_attention_fn=self._paged_attention_fn)
         cache = C.commit_rows(state.cache, emissions, starts, live)
         calls = calls + 1
 
@@ -307,18 +407,24 @@ class ContinuousEngine:
         blk = jnp.where(live, state.blk + 1, state.blk)
         finished = live & (eos_hit | (blk >= state.lane_nblocks))
         return state._replace(tokens=tokens, cache=cache, blk=blk,
-                              live=live & ~finished, steps=steps,
+                              live=state.live & ~finished, steps=steps,
                               calls=calls, key=key)
 
     # -- host-side scheduler -------------------------------------------------
     def warmup(self):
         state = self._init_state(jax.random.PRNGKey(0))
         N, P = self.n_lanes, self.spec.prompt_len
-        state = self._jit_admit(self.params, state,
-                                jnp.zeros((N, P), jnp.int32),
-                                jnp.ones((N,), bool),
-                                jnp.full((N,), self.spec.n_blocks, jnp.int32))
-        state = self._jit_decode_block(self.params, state)
+        state, _ = self._jit_admit(self.params, state,
+                                   jnp.zeros((N, P), jnp.int32),
+                                   jnp.ones((N,), bool),
+                                   jnp.full((N,), self.spec.n_blocks,
+                                            jnp.int32))
+        run = jnp.ones((N,), bool)
+        if self.paged:
+            state, ok = self._jit_alloc_block(state)
+            run = state.live & ok
+            state = self._jit_evict(state, jnp.zeros((N,), bool))
+        state = self._jit_decode_block(self.params, state, run)
         self._jit_gen_lengths(state.tokens).block_until_ready()
         self._warm = True
 
@@ -345,17 +451,28 @@ class ContinuousEngine:
         lane_req: List[Optional[Request]] = [None] * N
         lane_admit_t = np.zeros((N,), np.float64)
         out: List[Response] = []
+        self._pool_samples = []
+        self._live_samples = []
+        self._preemptions = 0
+        self._stall_rounds = 0
         t0 = time.perf_counter()
 
         while queue or any(r is not None for r in lane_req):
             now = time.perf_counter() - t0
             # ---- admission at the block boundary ----
+            # paged: budgeted by free *pages* for prompt + next block, not by
+            # whole-sequence reservation — a request enters as soon as its
+            # next block can be backed
             free = [i for i in range(N) if lane_req[i] is None]
+            free_pg = (int(np.asarray(C.free_page_count(state.cache)))
+                       if self.paged and free and queue else 0)
             admit = np.zeros((N,), bool)
             prompts = np.zeros((N, P), np.int32)
             nblocks = np.zeros((N,), np.int32)
             for lane in free:
                 if not queue or queue[0].arrival_s > now:
+                    break
+                if self.paged and free_pg < self._admit_pages:
                     break
                 req = queue.popleft()
                 lane_req[lane] = req
@@ -363,11 +480,18 @@ class ContinuousEngine:
                 admit[lane] = True
                 prompts[lane] = req.prompt
                 nblocks[lane] = self._lane_nblocks(req)
+                if self.paged:
+                    free_pg -= self._admit_pages
             if admit.any():
-                state = self._jit_admit(self.params, state,
-                                        jnp.asarray(prompts),
-                                        jnp.asarray(admit),
-                                        jnp.asarray(nblocks))
+                state, aok = self._jit_admit(self.params, state,
+                                             jnp.asarray(prompts),
+                                             jnp.asarray(admit),
+                                             jnp.asarray(nblocks))
+                if self.paged:
+                    aok = np.asarray(aok)
+                    assert bool(aok[admit].all()), \
+                        "page accounting bug: admitted within budget but " \
+                        "allocation failed"
             if not any(r is not None for r in lane_req):
                 # nothing decoding and nothing arrived yet: idle to the next
                 # arrival instead of spinning
@@ -377,8 +501,46 @@ class ContinuousEngine:
                         time.sleep(wait)
                 continue
 
-            # ---- one block-level decode step for every live lane ----
-            state = self._jit_decode_block(self.params, state)
+            # ---- paged: back every live lane's current block with pages ----
+            live = np.asarray(state.live)
+            if self.paged:
+                state, ok = self._jit_alloc_block(state)
+                run = live & np.asarray(ok)
+                while live.any() and not run.any():
+                    # every live lane is page-starved: preempt the youngest
+                    # (its pages go back to the pool, its request re-enters
+                    # the queue — deterministic greedy decode makes the
+                    # re-decode loss-free)
+                    victims = [i for i in range(N) if live[i]]
+                    victim = max(victims,
+                                 key=lambda i: (lane_admit_t[i], i))
+                    if len(victims) == 1:
+                        raise RuntimeError(
+                            "page pool exhausted with a single live lane — "
+                            "pool sizing invariant violated")
+                    vrow = np.zeros((N,), bool)
+                    vrow[victim] = True
+                    state = self._jit_evict(state, jnp.asarray(vrow))
+                    queue.appendleft(lane_req[victim])
+                    lane_req[victim] = None
+                    self._preemptions += 1
+                    live = np.asarray(state.live)
+                    state, ok = self._jit_alloc_block(state)
+                    run = live & np.asarray(ok)
+                if not live.any():
+                    continue
+                if (live & ~run).any():
+                    self._stall_rounds += 1
+                self._pool_samples.append(
+                    self.n_pages
+                    - int(np.asarray(C.free_page_count(state.cache))))
+            else:
+                run = live
+
+            # ---- one block-level decode step for the runnable lanes ----
+            self._live_samples.append(int(run.sum()))
+            state = self._jit_decode_block(self.params, state,
+                                           jnp.asarray(run))
             live = np.asarray(state.live)
             t_done = time.perf_counter() - t0
 
@@ -401,7 +563,38 @@ class ContinuousEngine:
                         latency_s=t_done - req.arrival_s,
                         queue_s=lane_admit_t[lane] - req.arrival_s))
                     lane_req[lane] = None
+                if self.paged:
+                    # return the finished lanes' pages to the pool *now* so
+                    # the next admission sees them
+                    drow = np.zeros((N,), bool)
+                    drow[done_lanes] = True
+                    state = self._jit_evict(state, jnp.asarray(drow))
         return out
+
+    def page_pool_stats(self) -> Dict[str, float]:
+        """Occupancy report for the last :meth:`generate` run (paged layout;
+        zeros for dense). Pages are sampled at every block boundary."""
+        if not self.paged or not self._pool_samples:
+            return {"n_pages": float(self.n_pages), "peak_pages": 0.0,
+                    "avg_pages": 0.0, "peak_occupancy": 0.0,
+                    "preemptions": 0.0, "stall_rounds": 0.0}
+        peak = max(self._pool_samples)
+        return {
+            "n_pages": float(self.n_pages),
+            "peak_pages": float(peak),
+            "avg_pages": float(np.mean(self._pool_samples)),
+            "peak_occupancy": peak / self.n_pages,
+            "preemptions": float(self._preemptions),
+            "stall_rounds": float(self._stall_rounds),
+        }
+
+    def concurrency_stats(self) -> Dict[str, float]:
+        """Decoding-lane concurrency for the last :meth:`generate` run,
+        sampled at every block-level decode step (both layouts)."""
+        if not self._live_samples:
+            return {"peak_lanes": 0.0, "avg_lanes": 0.0}
+        return {"peak_lanes": float(max(self._live_samples)),
+                "avg_lanes": float(np.mean(self._live_samples))}
 
 
 def make_engine(params, cfg: ModelConfig, serve: ServeConfig,

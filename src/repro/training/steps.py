@@ -12,10 +12,6 @@ that wires optimizer and jit.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

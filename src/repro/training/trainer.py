@@ -3,7 +3,6 @@ CDLM student distillation — the full paper pipeline at any scale."""
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

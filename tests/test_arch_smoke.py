@@ -4,7 +4,6 @@ Each assigned arch instantiates its REDUCED variant (2 periods, d_model<=256,
 <=4 experts) and runs one forward + one train step + one decode step on CPU,
 asserting output shapes and absence of NaNs.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ from repro.core import masks
 from repro.core import cache as C
 from repro.models import forward, init_model
 from repro.optim import adamw
-from repro.training.steps import ar_loss, cdlm_loss, dlm_pretrain_loss
+from repro.training.steps import ar_loss, cdlm_loss
 
 ARCHS = sorted(ARCHITECTURES)
 

@@ -1,0 +1,213 @@
+"""Per-lane cache primitives, both layouts.
+
+Dense: ``reset`` / ``commit_rows`` on *non-contiguous* lane subsets (the
+serving scheduler recycles arbitrary lanes, not prefixes). Paged: page
+alloc/free/commit mechanics, and THE reuse invariant — pages freed by an
+evicted request and re-allocated to a new one decode bit-identically to a
+fresh pool."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import cache as C
+from repro.core import masks
+from repro.models import forward, init_model
+
+CFG = get_config("qwen2-0.5b").reduced(dtype="float32")
+P, B, G = 8, 4, 8
+T = P + G
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model(jax.random.PRNGKey(0), CFG)
+
+
+def _emissions(params, tokens, L):
+    out = forward(params, tokens[:, :L], cfg=CFG, mode=masks.BLOCK_CAUSAL,
+                  prompt_len=P, block_size=B)
+    return out.emissions
+
+
+# ---------------------------------------------------------------------------
+# Dense per-lane paths on non-contiguous subsets
+# ---------------------------------------------------------------------------
+def test_reset_noncontiguous_lanes(params):
+    b = 4
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, T), 2,
+                                CFG.vocab_size)
+    cache = C.init_cache(CFG, b, T, dtype="float32")
+    cache = C.commit(cache, _emissions(params, tokens, P), 0)
+    rows = jnp.array([True, False, True, False])
+    out = C.reset(cache, rows)
+    for cs, os_ in zip(cache, out):
+        for k in cs:
+            old, new = np.asarray(cs[k]), np.asarray(os_[k])
+            assert (new[:, 0] == 0).all() and (new[:, 2] == 0).all(), k
+            assert np.array_equal(new[:, 1], old[:, 1]), k
+            assert np.array_equal(new[:, 3], old[:, 3]), k
+
+
+def test_reset_accepts_int_indices(params):
+    b = 4
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, T), 2,
+                                CFG.vocab_size)
+    cache = C.commit(C.init_cache(CFG, b, T, dtype="float32"),
+                     _emissions(params, tokens, P), 0)
+    by_mask = C.reset(cache, jnp.array([True, False, False, True]))
+    by_idx = C.reset(cache, jnp.array([0, 3]))
+    for a, c in zip(jax.tree_util.tree_leaves(by_mask),
+                    jax.tree_util.tree_leaves(by_idx)):
+        assert np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_commit_rows_noncontiguous_distinct_offsets(params):
+    """Lanes {0, 3} of 4 commit at *different* offsets; lanes {1, 2} must be
+    bit-untouched, and each written lane must match a solo dense commit at
+    its own offset."""
+    b = 4
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, T), 2,
+                                CFG.vocab_size)
+    base = C.commit(C.init_cache(CFG, b, T, dtype="float32"),
+                    _emissions(params, tokens, P), 0)
+    em = _emissions(params, tokens[:, P:P + B], B)
+    rows = jnp.array([True, False, False, True])
+    offsets = jnp.array([P, 0, 0, P + B])
+    got = C.commit_rows(base, em, offsets, rows)
+    for lane, off in ((0, P), (3, P + B)):
+        solo = C.commit(
+            jax.tree_util.tree_map(lambda a: a[:, lane:lane + 1], base),
+            jax.tree_util.tree_map(lambda a: a[:, lane:lane + 1], em), off)
+        for gs, ss in zip(got, solo):
+            for k in gs:
+                assert np.array_equal(np.asarray(gs[k][:, lane]),
+                                      np.asarray(ss[k][:, 0])), (lane, k)
+    for lane in (1, 2):
+        for gs, bs in zip(got, base):
+            for k in gs:
+                assert np.array_equal(np.asarray(gs[k][:, lane]),
+                                      np.asarray(bs[k][:, lane])), (lane, k)
+
+
+# ---------------------------------------------------------------------------
+# Paged mechanics
+# ---------------------------------------------------------------------------
+def test_alloc_lowest_first_all_or_nothing():
+    paged = C.init_paged_cache(CFG, 2, T, n_pages=4, page_size=B,
+                               dtype="float32")
+    paged, ok = C.alloc(paged, jnp.array([True, False]), 0, 3 * B)
+    assert bool(ok[0]) and not bool(ok[1])
+    assert np.asarray(paged.page_table)[0, :3].tolist() == [0, 1, 2]
+    # lane 1 wants 2 pages: only 1 free -> all-or-nothing failure, table
+    # stays clean
+    paged, ok = C.alloc(paged, jnp.array([False, True]), 0, 2 * B)
+    assert not bool(ok[1])
+    assert (np.asarray(paged.page_table)[1] == C.FREE).all()
+    # 1 page fits
+    paged, ok = C.alloc(paged, jnp.array([False, True]), 0, B)
+    assert bool(ok[1])
+    assert np.asarray(paged.page_table)[1, 0] == 3
+    assert int(C.free_page_count(paged)) == 0
+
+
+def test_alloc_lane_priority_order():
+    """Two lanes compete for 3 free pages, each wanting 2: the lower lane
+    index wins, the other fails cleanly."""
+    paged = C.init_paged_cache(CFG, 2, T, n_pages=3, page_size=B,
+                               dtype="float32")
+    paged, ok = C.alloc(paged, jnp.array([True, True]), 0, 2 * B)
+    assert bool(ok[0]) and not bool(ok[1])
+    assert int(C.free_page_count(paged)) == 1
+
+
+def test_free_returns_pages_and_clears_state():
+    paged = C.init_paged_cache(CFG, 2, T, n_pages=6, page_size=B,
+                               dtype="float32")
+    paged, _ = C.alloc(paged, jnp.array([True, True]), 0, 2 * B)
+    assert int(C.free_page_count(paged)) == 2
+    paged = C.free(paged, jnp.array([True, False]))
+    assert int(C.free_page_count(paged)) == 4
+    tbl = np.asarray(paged.page_table)
+    assert (tbl[0] == C.FREE).all() and (tbl[1] != C.FREE).any()
+    # lane 1's pages still owned by lane 1
+    owner = np.asarray(paged.page_owner)
+    assert (owner[tbl[1][tbl[1] != C.FREE]] == 1).all()
+
+
+def test_commit_rows_paged_respects_mask(params):
+    b = 2
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (b, T), 2,
+                                CFG.vocab_size)
+    paged = C.init_paged_cache(CFG, b, T, n_pages=6, page_size=B,
+                               dtype="float32")
+    paged, _ = C.alloc(paged, jnp.ones((b,), bool), 0, P)
+    em = _emissions(params, tokens, P)
+    sel = C.commit_rows(paged, em, 0, jnp.array([True, False]))
+    tbl = np.asarray(paged.page_table)
+    for slot in sel.slots:
+        for k in ("k", "v"):
+            if k in slot:
+                pool = np.asarray(slot[k])
+                # lane 1's pages must still be zero-initialized
+                assert (pool[:, tbl[1, 0]] == 0).all(), k
+                assert (pool[:, tbl[0, 0]] != 0).any(), k
+
+
+def test_gather_dense_view_matches_dense_cache(params):
+    b = 2
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (b, T), 2,
+                                CFG.vocab_size)
+    em = _emissions(params, tokens, P)
+    rows = jnp.ones((b,), bool)
+    dense = C.commit_rows(C.init_cache(CFG, b, T, dtype="float32"), em, 0,
+                          rows)
+    paged = C.init_paged_cache(CFG, b, T, n_pages=2 * (T // B), page_size=B,
+                               dtype="float32")
+    paged, _ = C.alloc(paged, rows, 0, T)
+    paged = C.commit_rows(paged, em, 0, rows)
+    view = C.gather_dense(paged)
+    for ds, ps in zip(dense, view):
+        for k in ds:
+            assert np.array_equal(np.asarray(ds[k][:, :, :P]),
+                                  np.asarray(ps[k][:, :, :P])), k
+
+
+def test_page_reuse_after_eviction_decodes_identically(params):
+    """Pages dirtied by one request, freed, and re-allocated to another must
+    decode bit-identically to a fresh pool — the eviction invariant the
+    continuous scheduler rests on."""
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (1, T), 2,
+                                CFG.vocab_size)
+    other = jax.random.randint(jax.random.PRNGKey(6), (1, T), 2,
+                               CFG.vocab_size)
+    rows = jnp.ones((1,), bool)
+
+    def decode_logits(paged):
+        paged, ok = C.alloc(paged, rows, 0, P + B)
+        assert bool(ok.all())
+        paged = C.commit_rows(paged, _emissions(params, prompt, P), 0, rows)
+        out = forward(params, prompt[:, P:P + B], cfg=CFG,
+                      mode=masks.BLOCK_CAUSAL, prompt_len=P, block_size=B,
+                      positions=P + jnp.arange(B), cache=paged, cache_len=P)
+        return np.asarray(out.logits)
+
+    fresh = C.init_paged_cache(CFG, 1, T, n_pages=T // B, page_size=B,
+                               dtype="float32")
+    want = decode_logits(fresh)
+
+    dirty = C.init_paged_cache(CFG, 1, T, n_pages=T // B, page_size=B,
+                               dtype="float32")
+    dirty, _ = C.alloc(dirty, rows, 0, T)          # other request takes all
+    dirty = C.commit_rows(dirty, _emissions(params, other, T), 0, rows)
+    dirty = C.free(dirty, rows)                    # evicted
+    got = decode_logits(dirty)                     # recycled pages
+    assert np.array_equal(want, got)
+
+
+def test_paged_rejects_attention_free():
+    rwkv = get_config("rwkv6-1.6b").reduced(dtype="float32")
+    with pytest.raises(ValueError, match="attention"):
+        C.init_paged_cache(rwkv, 1, T, n_pages=4, page_size=B,
+                           dtype="float32")

@@ -1,9 +1,8 @@
 """Synthetic-task verifiers and pipeline determinism."""
 import numpy as np
-import pytest
 
 from repro.data import Corpus, TaskSpec, answer_mask, sample_batch, verify
-from repro.data.synthetic import ASK, DIGIT0, EOS, PLUS, SORT_TAG
+from repro.data.synthetic import ASK, DIGIT0, EOS, PLUS
 
 
 def test_sort_task_verifier_accepts_truth():

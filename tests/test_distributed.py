@@ -5,7 +5,6 @@
 - a tiny-mesh dry-run (2×4) lowers+compiles a real train & decode step;
 - the sequence-parallel shard_map decode matches the single-device oracle.
 """
-import json
 import os
 import subprocess
 import sys

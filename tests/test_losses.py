@@ -1,8 +1,6 @@
 """CDLM objective correctness (Eqs. 4–7)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import losses as LS
@@ -42,7 +40,7 @@ def test_consistency_loss_stop_gradient():
         logits_ystar = w * 2 * jnp.ones((1, 2, 4))
         return LS.consistency_loss(logits_y, logits_ystar,
                                    jnp.ones((1, 2), bool))
-    g = jax.grad(loss)(jnp.asarray(1.0))
+    jax.grad(loss)(jnp.asarray(1.0))
     # constant logits -> uniform distributions -> zero loss AND the target
     # branch contributes no gradient; perturb to check flow:
     def loss2(wy, wstar):

@@ -1,7 +1,5 @@
 """Property tests for the attention-visibility builders (paper Fig. 2)."""
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import masks

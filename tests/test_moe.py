@@ -2,8 +2,6 @@
 when capacity is not binding; aux-loss behavior; dropless decode."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.configs.registry import get_config
 from repro.models import moe as MO

@@ -3,8 +3,6 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.checkpoint import restore, save
 from repro.configs.base import TrainConfig

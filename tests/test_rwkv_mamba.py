@@ -2,7 +2,6 @@
 recurrence (the property that makes their O(1) decode caches exact)."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.registry import get_config
 from repro.models import mamba as M
