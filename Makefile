@@ -15,10 +15,12 @@ verify-fast:
 bench:
 	$(PYTHON) -m benchmarks.run
 
-# CI-sized serving benchmark: random-init params, tiny trace; writes
-# BENCH_serving.json (uploaded as an artifact by the bench-smoke job)
+# CI-sized benchmarks: random-init params, tiny shapes; write
+# BENCH_serving.json + BENCH_kernels.json (uploaded as artifacts by the
+# bench-smoke job so the perf trajectory accumulates per PR)
 bench-smoke:
 	$(PYTHON) -m benchmarks.bench_serving --smoke --json BENCH_serving.json
+	$(PYTHON) -m benchmarks.bench_kernels --smoke --json BENCH_kernels.json
 
 # requires ruff (pip install ruff); rules configured in pyproject.toml
 lint:

@@ -10,8 +10,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.base import A100, TPU_V5E
 from repro.roofline.ai_model import (
+    LLADA_8B,
     PAPER_TARGETS,
     attainable_tflops,
+    blockwise_dlm_ai,
     paper_table,
 )
 
@@ -49,6 +51,19 @@ def run(csv_rows=None):
     # ridge crossing: B=32 crosses by bs~8, B=16 by bs~16 (paper's numbers)
     assert r1[8]["block32"] > A100.ridge_ai
     assert r1[16]["block16"] > A100.ridge_ai
+    # beyond the paper: decode AI once the fused unembed+select kernel
+    # (repro.kernels.select) removes the (T, V) logits round-trip
+    print("\nblock-wise (B=32) AI with fused unembed+select:")
+    for bs in (1, 8, 32):
+        dense = blockwise_dlm_ai(LLADA_8B, bs, 32)
+        fused = blockwise_dlm_ai(LLADA_8B, bs, 32, fused_select=True)
+        assert fused > dense, "fused select must strictly raise AI"
+        print(f"  bs={bs:<4d} dense-lm_head={dense:7.1f}  "
+              f"fused={fused:7.1f}  (x{fused / dense:.2f})")
+        if csv_rows is not None:
+            csv_rows.append((f"ai_model/block32_fused_bs{bs}", 0.0,
+                             f"ai={fused:.1f};dense={dense:.1f}"))
+
     # roofline placement (App. B.4): attainable TFLOP/s
     print("\nattainable TFLOP/s on A100 (roofline):")
     for kind in ("ar", "vanilla", "block32"):

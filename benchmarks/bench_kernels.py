@@ -1,8 +1,27 @@
-"""Kernel-layer microbenchmark: jit'd pure-jnp oracle vs the chunked
-flash path at model shapes (the Pallas kernels themselves are validated in
-interpret mode — timing them on CPU would measure the interpreter)."""
+"""Kernel-layer microbenchmarks.
+
+Attention: jit'd pure-jnp oracle vs the chunked flash path at model shapes
+(the Pallas kernels themselves are validated in interpret mode — timing
+them on CPU would measure the interpreter).
+
+Select: the decode loop's per-step vocabulary cost. Baseline = dense
+candidate selection (lm_head logits + fp32 softmax + argmax + gather, the
+(T, V) round-trip ``repro.core.diffusion.confidence_and_candidates``
+performs); fused = ``repro.kernels.select`` with ``impl='streaming'`` —
+the same online statistics the Pallas kernel keeps in VMEM, expressed as a
+jit-compiled vocab-chunked scan, so CPU timing reflects the algorithm's
+memory behavior instead of the Pallas interpreter. Swept at Dream/LLaDA-
+scale vocabs (V ∈ {32k, 128k}), where the baseline's (T, V) HBM round-trip
+dominates a cached decode step.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels
+    PYTHONPATH=src python -m benchmarks.bench_kernels --smoke \
+        --json BENCH_kernels.json
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 import time
@@ -13,12 +32,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import masks
+from repro.kernels.select import fused_select, select_ref
 from repro.models.layers import attention_core
+
+SELECT_VOCABS = (32_768, 131_072)
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -26,11 +48,11 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(csv_rows=None):
-    print("\n== kernel-layer microbench (CPU, jnp paths) ==")
+def run_attention(csv_rows=None, smoke=False):
+    print("\n== kernel-layer microbench: attention (CPU, jnp paths) ==")
     key = jax.random.PRNGKey(0)
     b, Kv, G, hd = 1, 2, 4, 64
-    for L in (512, 2048):
+    for L in ((512,) if smoke else (512, 2048)):
         q = jax.random.normal(key, (b, L, Kv, G, hd))
         k = jax.random.normal(key, (b, L, Kv, hd))
         v = jax.random.normal(key, (b, L, Kv, hd))
@@ -54,5 +76,60 @@ def run(csv_rows=None):
     return csv_rows
 
 
+def run_select(csv_rows=None, results=None, smoke=False):
+    """Fused-vs-baseline candidate selection at decode-step shapes."""
+    T, d = (32, 128) if smoke else (128, 512)
+    iters = 3 if smoke else 5
+    print(f"\n== kernel-layer microbench: fused select "
+          f"(T={T} decode rows, d={d}) ==")
+    print(f"  {'V':>8} {'baseline us':>12} {'fused us':>10} {'speedup':>8}")
+    key = jax.random.PRNGKey(0)
+    sel = {}
+    for V in SELECT_VOCABS:
+        ks = jax.random.split(key, 3)
+        h = jax.random.normal(ks[0], (T, d), jnp.float32) * 0.5
+        w = jax.random.normal(ks[1], (d, V), jnp.float32) * 0.1
+        m = jax.random.bernoulli(ks[2], 0.7, (T,))
+        # the dense decode-step selection ((T, V) logits + full fp32
+        # softmax + argmax + gather) IS the kernel package's oracle
+        base = jax.jit(select_ref, static_argnames=("softcap",))
+        fused = jax.jit(lambda h, w, m: fused_select(
+            h, w, m, impl="streaming", block_v=2048))
+        tb = _time(base, h, w, m, iters=iters)
+        tf = _time(fused, h, w, m, iters=iters)
+        speedup = tb / tf if tf > 0 else float("inf")
+        print(f"  {V:>8} {tb:>12.0f} {tf:>10.0f} {speedup:>7.2f}x")
+        if csv_rows is not None:
+            csv_rows.append((f"kernels/select_baseline_V{V}", tb, ""))
+            csv_rows.append((f"kernels/select_fused_V{V}", tf,
+                             f"{speedup:.2f}"))
+        sel[f"V{V}"] = {"T": T, "d": d, "baseline_us": tb, "fused_us": tf,
+                        "speedup": speedup}
+    if results is not None:
+        results["select"] = sel
+    return sel
+
+
+def run(csv_rows=None, smoke=False, results=None):
+    run_attention(csv_rows, smoke=smoke)
+    run_select(csv_rows=csv_rows, results=results, smoke=smoke)
+    return csv_rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes (fewer rows/iters; same V sweep)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write benchmark numbers as JSON")
+    args = ap.parse_args(argv)
+    results = {"smoke": args.smoke, "select_vocabs": list(SELECT_VOCABS)}
+    run(smoke=args.smoke, results=results)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

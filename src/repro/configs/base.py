@@ -261,6 +261,11 @@ class ServeConfig:
     # capacity (max_batch lanes x full canvas). Smaller pools trade peak
     # concurrency for memory; the continuous scheduler admits by free pages.
     page_pool_pages: Optional[int] = None
+    # Fused unembed + online-softmax candidate selection
+    # (repro.kernels.select): decode forwards skip the lm_head and no
+    # (b, ·, V) logits tensor is materialized. Greedy (temperature 0) only;
+    # sampled decoding silently keeps the baseline logits path.
+    fused_select: bool = False
 
 
 @dataclass(frozen=True)

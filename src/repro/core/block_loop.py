@@ -43,7 +43,7 @@ from repro.configs.base import ModelConfig
 from repro.core import cache as C
 from repro.core import diffusion as D
 from repro.core import masks
-from repro.models import forward
+from repro.models import forward, unembed_matrix
 
 
 class SampleResult(NamedTuple):
@@ -69,6 +69,12 @@ class SamplerSpec:
     # only meaningful for the exact-commit policy (the approx policies
     # refresh whole-canvas KV, so every page is live anyway).
     cache_layout: str = "dense"
+    # Route greedy candidate selection through the fused unembed +
+    # online-softmax kernel (repro.kernels.select): decode forwards skip
+    # lm_head and no (b, ·, V) logits tensor is built. Only engages at
+    # temperature 0 — sampled decoding needs logits-shaped categorical
+    # draws to keep the baseline RNG stream bit-for-bit.
+    fused_select: bool = False
 
     @property
     def n_blocks(self) -> int:
@@ -142,15 +148,19 @@ def _block_pos_mask(T: int, start: int, size: int):
     return (pos >= start) & (pos < start + size)
 
 
-def _full_logits(params, tokens, cfg, spec, mode, extras):
+def _full_logits(params, tokens, cfg, spec, mode, extras,
+                 return_logits=True):
     """Full forward over the canvas (+ prefix embeds); returns the model
     output with logits/hidden sliced back to canvas coordinates."""
     out = forward(params, tokens, cfg=cfg, mode=mode,
                   prompt_len=spec.full_prompt_len, block_size=spec.block_size,
-                  attn_impl=spec.attn_impl, **extras)
+                  attn_impl=spec.attn_impl, return_logits=return_logits,
+                  **extras)
     if spec.pos_offset:
-        out = out._replace(logits=out.logits[:, spec.pos_offset:],
-                           hidden=out.hidden[:, spec.pos_offset:])
+        out = out._replace(
+            logits=(None if out.logits is None
+                    else out.logits[:, spec.pos_offset:]),
+            hidden=out.hidden[:, spec.pos_offset:])
     return out
 
 
@@ -160,6 +170,10 @@ def _dec_extras(extras):
 
 
 def _threshold_update(tokens, logits_canvas, bmask, spec, cfg, key, active):
+    """Legacy canvas-coordinate threshold update (temperature > 0 only:
+    ``jax.random.categorical`` draws bits shaped like its logits, so the
+    sampled path must keep canvas-shaped logits for seed RNG bit-compat).
+    The greedy path selects in block coordinates — no (b, T, V) canvas."""
     cand, conf = D.confidence_and_candidates(
         logits_canvas, tokens, cfg.mask_token_id, spec.temperature, key)
     sel = D.select_threshold_in_block(conf, bmask[None, :], spec.conf_threshold)
@@ -167,11 +181,53 @@ def _threshold_update(tokens, logits_canvas, bmask, spec, cfg, key, active):
     return jnp.where(sel, cand.astype(tokens.dtype), tokens)
 
 
+def _block_candidates(params, cfg, spec, out, start, block_tokens, key):
+    """(cand, conf) for the active block, in block coordinates (b, B).
+
+    ``out`` is the model output of either a block decode (logits/hidden
+    already block-shaped) or a full-canvas forward (sliced here).
+    ``spec.fused_select`` reads ``out.hidden`` through the fused
+    unembed+select kernel (``out.logits`` is None in that mode); the
+    baseline path softmaxes ``out.logits``. Bit-identical selection to the
+    canvas-coordinate path at temperature 0: softmax/argmax rows are
+    independent, and out-of-block positions could never be selected."""
+    B = spec.block_size
+    if spec.fused_select:
+        h = out.hidden
+        if h.shape[1] != B:
+            h = jax.lax.dynamic_slice_in_dim(h, start, B, 1)
+        return D.confidence_and_candidates_fused(
+            h, unembed_matrix(params, cfg), block_tokens, cfg.mask_token_id,
+            spec.temperature, key, softcap=cfg.final_logit_softcap)
+    logits = out.logits
+    if logits.shape[1] != B:
+        logits = jax.lax.dynamic_slice_in_dim(logits, start, B, 1)
+    return D.confidence_and_candidates(logits, block_tokens,
+                                       cfg.mask_token_id, spec.temperature,
+                                       key)
+
+
+def _threshold_block_update(params, cfg, spec, tokens, out, start, key,
+                            active):
+    """Block-coordinate threshold finalization: slice the active block,
+    select on (b, B) candidates/confidences, scatter only the finalized
+    *tokens* back — the per-step (b, T, V) logits canvas is gone."""
+    B = spec.block_size
+    bt = jax.lax.dynamic_slice_in_dim(tokens, start, B, 1)
+    cand, conf = _block_candidates(params, cfg, spec, out, start, bt, key)
+    sel = D.select_threshold_in_block(conf, jnp.ones((1, B), bool),
+                                      spec.conf_threshold)
+    sel = sel & active[:, None]
+    bt = jnp.where(sel, cand.astype(bt.dtype), bt)
+    return jax.lax.dynamic_update_slice_in_dim(tokens, bt, start, 1)
+
+
 def _refresh_cache(params, tokens, cfg, spec, kv_cache, extras):
-    """Full bidirectional forward; commit KV for every position."""
+    """Full bidirectional forward; commit KV for every position. Only the
+    emissions are consumed, so the lm_head is skipped outright."""
     out = forward(params, tokens, cfg=cfg, mode=masks.BIDIRECTIONAL,
                   prompt_len=spec.full_prompt_len, block_size=spec.block_size,
-                  attn_impl=spec.attn_impl, **extras)
+                  attn_impl=spec.attn_impl, return_logits=False, **extras)
     return C.commit(kv_cache, out.emissions, 0)
 
 
@@ -219,6 +275,10 @@ def _top1_loop(params, prompt_tokens, *, cfg, spec, strategy, key, extras,
     finalized_at = jnp.full((b, G), -1, jnp.int32)
     hidden_buf = jnp.zeros((b, G, cfg.d_model), jnp.float32)
     step_counter = 0
+    # greedy: block-coordinate selection (and, with spec.fused_select, no
+    # logits at all); sampled: seed canvas path for RNG bit-compat
+    blockwise = spec.temperature <= 0
+    fused = spec.fused_select and blockwise
 
     for blk in range(spec.n_blocks):
         start = P + blk * B
@@ -226,11 +286,23 @@ def _top1_loop(params, prompt_tokens, *, cfg, spec, strategy, key, extras,
         for _ in range(B):
             key, sub = jax.random.split(key)
             out = _full_logits(params, tokens, cfg, spec, strategy.attn_mode,
-                               extras)
-            cand, conf = D.confidence_and_candidates(
-                out.logits, tokens, cfg.mask_token_id, spec.temperature, sub)
-            sel = D.select_topk_in_block(conf, bmask[None, :], 1)
-            tokens = jnp.where(sel, cand.astype(tokens.dtype), tokens)
+                               extras, return_logits=not fused)
+            if blockwise:
+                bt = jax.lax.dynamic_slice_in_dim(tokens, start, B, 1)
+                cand, conf = _block_candidates(params, cfg, spec, out, start,
+                                               bt, sub)
+                bsel = D.select_topk_in_block(conf, jnp.ones((1, B), bool), 1)
+                bt = jnp.where(bsel, cand.astype(bt.dtype), bt)
+                tokens = jax.lax.dynamic_update_slice_in_dim(tokens, bt,
+                                                             start, 1)
+                sel = jax.lax.dynamic_update_slice(
+                    jnp.zeros((b, T), bool), bsel, (0, start))
+            else:
+                cand, conf = D.confidence_and_candidates(
+                    out.logits, tokens, cfg.mask_token_id, spec.temperature,
+                    sub)
+                sel = D.select_topk_in_block(conf, bmask[None, :], 1)
+                tokens = jnp.where(sel, cand.astype(tokens.dtype), tokens)
             if record_hidden:
                 gen_sel = sel[:, P:]
                 finalized_at = jnp.where(gen_sel, step_counter, finalized_at)
@@ -262,6 +334,10 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
     R = spec.cache_refresh_interval
     done = jnp.zeros((b,), bool)
     steps = jnp.zeros((b,), jnp.int32)
+    # greedy: block-coordinate selection (and, with spec.fused_select,
+    # hidden-only decode forwards); sampled: seed canvas path (RNG compat)
+    blockwise = spec.temperature <= 0
+    fused = spec.fused_select and blockwise
 
     if policy == "none":
         kv_cache = None
@@ -274,7 +350,7 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
         kv_cache = _init_exact_cache(cfg, b, S, spec)
         out = forward(params, tokens[:, :P], cfg=cfg, mode=strategy.attn_mode,
                       prompt_len=spec.full_prompt_len, block_size=B,
-                      attn_impl=spec.attn_impl, **extras)
+                      attn_impl=spec.attn_impl, return_logits=False, **extras)
         kv_cache = _commit_any(kv_cache, out.emissions, 0, b)
         calls = jnp.ones((), jnp.int32)
 
@@ -294,7 +370,8 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
                            positions=astart + jnp.arange(B), cache=kv_cache,
                            cache_len=astart, cache_valid=cache_valid,
                            use_long_window=use_long_window,
-                           attn_impl=spec.attn_impl, **dx)
+                           attn_impl=spec.attn_impl,
+                           return_logits=not fused, **dx)
 
         if policy == "approx-dual" and blk > 0:
             kv_cache = _refresh_cache(params, tokens, cfg, spec, kv_cache,
@@ -318,18 +395,26 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
                     lambda c: c, kv_cache)
             if policy == "none":
                 out = _full_logits(params, tokens, cfg, spec,
-                                   strategy.attn_mode, extras)
-                logits_canvas = out.logits
+                                   strategy.attn_mode, extras,
+                                   return_logits=not fused)
             else:
                 out = block_out(tokens, kv_cache)
-                logits_canvas = jnp.zeros((b, T, out.logits.shape[-1]),
-                                          out.logits.dtype)
-                logits_canvas = jax.lax.dynamic_update_slice_in_dim(
-                    logits_canvas, out.logits, start, 1)
             active = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :],
                              axis=-1) & ~done
-            tokens = _threshold_update(tokens, logits_canvas, bmask, spec,
-                                       cfg, sub, active)
+            if blockwise:
+                tokens = _threshold_block_update(params, cfg, spec, tokens,
+                                                 out, start, sub, active)
+            else:
+                # sampled decoding: seed-identical canvas-shaped categorical
+                if policy == "none":
+                    logits_canvas = out.logits
+                else:
+                    logits_canvas = jnp.zeros((b, T, out.logits.shape[-1]),
+                                              out.logits.dtype)
+                    logits_canvas = jax.lax.dynamic_update_slice_in_dim(
+                        logits_canvas, out.logits, start, 1)
+                tokens = _threshold_update(tokens, logits_canvas, bmask, spec,
+                                           cfg, sub, active)
             return (tokens, kv_cache, steps + active.astype(jnp.int32),
                     calls + 1, key, done, it + 1)
 
@@ -432,7 +517,8 @@ def run_block_loop(params, prompt_tokens, *, cfg: ModelConfig,
 def lane_block_forward(params, tokens, starts, kv_cache, *, cfg: ModelConfig,
                        spec: SamplerSpec, extras=None,
                        use_long_window: bool = False,
-                       paged_attention_fn=None):
+                       paged_attention_fn=None,
+                       return_hidden: bool = False):
     """Block-causal cached forward where each lane decodes its own block.
 
     tokens: (b, T) canvases; starts: (b,) canvas coordinate of each lane's
@@ -440,7 +526,10 @@ def lane_block_forward(params, tokens, starts, kv_cache, *, cfg: ModelConfig,
     batched on axis 1) or a :class:`repro.core.cache.PagedCache` (K/V pools
     shared across lanes, page tables batched on axis 0).
     Returns ``(logits (b, B, V), emissions)`` with emissions batched on
-    axis 1, ready for :func:`repro.core.cache.commit_rows`.
+    axis 1, ready for :func:`repro.core.cache.commit_rows`. With
+    ``return_hidden`` the first element is the post-norm hidden state
+    ``(b, B, d)`` instead and the lm_head is skipped — the fused-select
+    serving path feeds it straight into ``kernels.select``.
 
     Exactness: under the block-causal mask a lane's logits depend only on
     its own committed cache rows and its own block, so mixing lanes at
@@ -484,9 +573,10 @@ def lane_block_forward(params, tokens, starts, kv_cache, *, cfg: ModelConfig,
                       paged_decode_attention_fn=(paged_attention_fn
                                                  if paged else None),
                       use_long_window=use_long_window,
-                      attn_impl=spec.attn_impl, **dx)
+                      attn_impl=spec.attn_impl,
+                      return_logits=not return_hidden, **dx)
         emissions = jax.tree_util.tree_map(lambda a: a[:, 0], out.emissions)
-        return out.logits[0], emissions
+        return (out.hidden[0] if return_hidden else out.logits[0]), emissions
 
     return jax.vmap(one, in_axes=(0, 0, cache_axes), out_axes=(0, 1))(
         tokens, starts, kv_cache)

@@ -69,6 +69,39 @@ def confidence_and_candidates(logits, tokens, mask_id: int,
     return cand, conf
 
 
+def confidence_and_candidates_fused(hidden, w, tokens, mask_id: int,
+                                    temperature: float = 0.0, key=None, *,
+                                    softcap=None, impl: str = "auto",
+                                    interpret=None):
+    """Fused-kernel variant of :func:`confidence_and_candidates`.
+
+    Takes pre-``lm_head`` hidden states ``(..., d)`` plus the unembedding
+    matrix ``w (d, V)`` (``models.unembed_matrix``) instead of logits, and
+    routes greedy selection through ``repro.kernels.select.fused_select`` —
+    unembed, online softmax, argmax and confidence in one vocab-tiled pass,
+    so the ``(..., V)`` logits tensor never exists. ``softcap`` is the
+    model's final-logit softcap (applied in-kernel, where ``lm_head`` would
+    have applied it).
+
+    Sampled decoding (``temperature > 0`` with a key) falls back to dense
+    logits + the reference path: ``jax.random.categorical`` draws bits
+    shaped like its logits, so only the logits-shaped fallback reproduces
+    the baseline RNG stream bit-for-bit.
+    """
+    from repro.kernels.select import fused_select  # kernels are heavier
+    # imports (pallas); keep them out of core's import path until used
+
+    if temperature > 0.0 and key is not None:
+        logits = jnp.einsum("...d,dv->...v", hidden, w,
+                            preferred_element_type=jnp.float32)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        return confidence_and_candidates(logits, tokens, mask_id,
+                                         temperature, key)
+    return fused_select(hidden, w, tokens == mask_id, softcap=softcap,
+                        impl=impl, interpret=interpret)
+
+
 def select_topk_in_block(conf, block_mask, k: int = 1):
     """Boolean selection of the top-k confident positions within the active
     block (vanilla low-confidence-remasking unmasks top-1 per step)."""

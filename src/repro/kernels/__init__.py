@@ -5,17 +5,41 @@
                     (the §4.3 serving hot loop), GQA groups folded into
                     query rows for MXU utilization;
 - ``xent``        — fused streaming large-vocab softmax cross-entropy
-                    (150k–256k-vocab lm-head loss without (T, V) logits).
+                    (150k–256k-vocab lm-head loss without (T, V) logits);
+- ``select``      — fused unembed + online-softmax candidate selection
+                    (the §4.3 decode loop's per-step confidence/argmax
+                    without (b, L, V) logits).
 
 Each subpackage: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 (jit'd model-layout wrapper), ``ref.py`` (pure-jnp oracle). Validated with
-``interpret=True`` shape/dtype sweeps in tests/test_kernels.py; on real TPU
-pass ``interpret=False``.
+``interpret=True`` shape/dtype sweeps in tests/test_kernels.py /
+tests/test_select_kernel.py; every op resolves ``interpret=None`` through
+:func:`default_interpret`, so real accelerators compile the kernels and
+CPU runs emulate them without call sites having to care.
 """
+import jax
 from jax.experimental.pallas import tpu as _pltpu
 
 # jax renamed TPUCompilerParams -> CompilerParams (~0.5); support both.
 CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
     getattr(_pltpu, "TPUCompilerParams")
 
-from repro.kernels import block_attn, decode_attn, xent  # noqa: F401,E402
+
+def default_interpret() -> bool:
+    """Backend-aware default for the ``interpret`` flag of every kernel op.
+
+    Every kernel in this repo is TPU-flavored Pallas (``pltpu`` memory
+    spaces, compiler params, scalar prefetch), so only a TPU backend can
+    actually compile them — everywhere else (CPU tests/CI, GPU) they run
+    under the interpreter. Resolved at trace time, so an op called with
+    ``interpret=None`` does the right thing on whatever backend jax
+    selected."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """``None`` -> :func:`default_interpret`; explicit bools pass through."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+from repro.kernels import block_attn, decode_attn, select, xent  # noqa: F401,E402

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import CompilerParams
+from repro.kernels import CompilerParams, resolve_interpret
 
 NEG_INF = -1e30
 
@@ -97,13 +97,18 @@ def block_attention(q, k, v, *, mode: str = "block_causal",
                     prompt_len: int = 0, block_size: int = 1,
                     window: Optional[int] = None, scale: float = 1.0,
                     softcap: Optional[float] = None, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True):
-    """q/k/v: (bh, L, d) — batch×heads flattened, GQA pre-expanded by ops.py.
-    L must be a multiple of the tile sizes (ops.py pads). Returns (bh, L, d).
+                    block_k: int = 128, g: int = 1,
+                    interpret: Optional[bool] = None):
+    """q: (bh, L, d) — batch×q-heads flattened; k/v: (bh // g, L, d) — KV
+    heads *not* expanded: query head ``h`` reads KV head ``h // g`` through
+    the BlockSpec index map (in-kernel GQA head-group indexing), so the
+    G-fold repeat never exists in HBM. L must be a multiple of the tile
+    sizes (ops.py pads). Returns (bh, L, d).
     """
     bh, Lq, d = q.shape
     Lk = k.shape[1]
     assert Lq % block_q == 0 and Lk % block_k == 0, (Lq, Lk, block_q, block_k)
+    assert bh == k.shape[0] * g, (bh, k.shape[0], g)
     n_q, n_k = Lq // block_q, Lk // block_k
 
     kernel = functools.partial(
@@ -116,8 +121,8 @@ def block_attention(q, k, v, *, mode: str = "block_causal",
         grid=(bh, n_q, n_k),
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // g, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, Lq, d), jnp.float32),
@@ -128,5 +133,5 @@ def block_attention(q, k, v, *, mode: str = "block_causal",
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

@@ -5,7 +5,9 @@ grid (padded KV rows are masked out by position — they land in the
 "future" of every real query under causal/block-causal; for bidirectional
 we pass an explicit valid length via a window trick is not needed because
 padded queries are discarded and padded keys get NEG_INF through the
-``kv_len`` argument), expands KV heads, and flattens batch×heads.
+``kv_len`` argument) and flattens batch×heads. GQA KV heads are *not*
+expanded — the kernel indexes KV head ``h // G`` for query head ``h`` in
+its BlockSpec index map, so no G-fold KV copy is materialized in HBM.
 """
 from __future__ import annotations
 
@@ -36,7 +38,8 @@ def flash_block_attention(q, k, v, *, mode: str = "block_causal",
                           prompt_len: int = 0, block_size: int = 1,
                           window: Optional[int] = None, scale: float = 1.0,
                           softcap: Optional[float] = None, block_q: int = 128,
-                          block_k: int = 128, interpret: bool = True):
+                          block_k: int = 128,
+                          interpret: Optional[bool] = None):
     """q: (b, L, Kv, G, hd); k/v: (b, L, Kv, hd) -> (b, L, Kv, G, hd) fp32.
 
     Self-attention over a full sequence (training / prefill). Padding rows
@@ -61,14 +64,16 @@ def flash_block_attention(q, k, v, *, mode: str = "block_causal",
         prompt_len = 0
         block_size = L
 
-    # expand KV heads for GQA and flatten (b, Kv, G) -> bh
+    # flatten (b, Kv, G) -> bh for q; KV heads stay unexpanded — the kernel
+    # maps query head h to KV head h // G in its BlockSpec index map, so the
+    # G-fold KV repeat never lands in HBM
     qf = qp.transpose(0, 2, 3, 1, 4).reshape(b * Kv * G, Lp, hd)
-    kf = jnp.repeat(kp.transpose(0, 2, 1, 3).reshape(b * Kv, Lkp, hd), G, axis=0)
-    vf = jnp.repeat(vp.transpose(0, 2, 1, 3).reshape(b * Kv, Lkp, hd), G, axis=0)
+    kf = kp.transpose(0, 2, 1, 3).reshape(b * Kv, Lkp, hd)
+    vf = vp.transpose(0, 2, 1, 3).reshape(b * Kv, Lkp, hd)
 
     out = block_attention(qf, kf, vf, mode=eff_mode, prompt_len=prompt_len,
                           block_size=block_size, window=window, scale=scale,
                           softcap=softcap, block_q=block_q, block_k=block_k,
-                          interpret=interpret)
+                          g=G, interpret=interpret)
     out = out.reshape(b, Kv, G, Lp, hd).transpose(0, 3, 1, 2, 4)
     return out[:, :L]

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import CompilerParams
+from repro.kernels import CompilerParams, resolve_interpret
 
 NEG_INF = -1e30
 
@@ -94,7 +94,8 @@ def decode_attention_partial(q, k_cache, v_cache, cache_len, *,
                              scale: float = 1.0,
                              softcap: Optional[float] = None,
                              window: Optional[int] = None, g: int = 1,
-                             block_k: int = 128, interpret: bool = True):
+                             block_k: int = 128,
+                             interpret: Optional[bool] = None):
     """q: (bKv, BqG, hd); cache: (bKv, S, hd); cache_len: scalar int32.
 
     Returns unnormalized partials (acc (bKv, BqG, hd), m (bKv, BqG, 1),
@@ -133,7 +134,7 @@ def decode_attention_partial(q, k_cache, v_cache, cache_len, *,
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(lens, q, k_cache, v_cache)
     return acc, m, l
 
@@ -198,7 +199,7 @@ def paged_decode_attention_partial(q, k_pages, v_pages, page_table,
                                    cache_lens, *, scale: float = 1.0,
                                    softcap: Optional[float] = None,
                                    window: Optional[int] = None, g: int = 1,
-                                   interpret: bool = True):
+                                   interpret: Optional[bool] = None):
     """q: (b, Kv, BqG, hd); pools: (Kv, n_pages, page, hd);
     page_table: (b, n_t) int32 (-1 = unallocated); cache_lens: (b,) int32
     per-lane valid prefix.
@@ -253,6 +254,6 @@ def paged_decode_attention_partial(q, k_pages, v_pages, page_table,
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(pt, lens, q, k_pages, v_pages)
     return acc, m, l

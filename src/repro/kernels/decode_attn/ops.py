@@ -57,7 +57,7 @@ def _block_partial(q, k_blk, v_blk, *, scale, softcap, window, g):
 def decode_attention(q, k_cache, v_cache, k_blk, v_blk, cache_len, *,
                      scale: float = 1.0, softcap: Optional[float] = None,
                      window: Optional[int] = None, block_k: int = 128,
-                     interpret: bool = True):
+                     interpret: Optional[bool] = None):
     """Model-layout decode attention.
 
     q: (b, Bq, Kv, G, hd); k/v_cache: (b, S, Kv, hd); k/v_blk: (b, Bq, Kv, hd);
@@ -87,7 +87,7 @@ def paged_decode_attention(q, k_pages, v_pages, k_blk, v_blk, page_table,
                            cache_lens, *, scale: float = 1.0,
                            softcap: Optional[float] = None,
                            window: Optional[int] = None,
-                           interpret: bool = True):
+                           interpret: Optional[bool] = None):
     """Model-layout decode attention over a block-paged KV pool.
 
     q: (b, Bq, Kv, G, hd); k/v_pages: (n_pages, page, Kv, hd) pools shared

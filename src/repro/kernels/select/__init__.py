@@ -1,0 +1,6 @@
+from repro.kernels.select.ops import fused_select  # noqa: F401
+from repro.kernels.select.ref import (  # noqa: F401
+    select_ref,
+    select_streaming,
+)
+from repro.kernels.select.select import select_forward  # noqa: F401

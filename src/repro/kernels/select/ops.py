@@ -1,0 +1,77 @@
+"""Public fused-select op (decode-only, no VJP).
+
+``fused_select`` maps model-layout hidden states ``(..., d)`` plus the
+unembedding matrix ``(d, V)`` to ``(candidate ids, confidences)`` of shape
+``(...)`` without ever materializing ``(..., V)`` logits:
+
+- ``impl='pallas'``    — the vocab-tiled Pallas kernel (``select.py``);
+  compiled on accelerators, interpreted elsewhere (``interpret=None``
+  resolves through ``kernels.default_interpret``).
+- ``impl='streaming'`` — the identical online-statistics algorithm as a
+  jit-compiled ``lax.scan`` over vocab chunks (``ref.select_streaming``);
+  this is the fast fused path on CPU, where interpreting the Pallas kernel
+  would cost more than the HBM traffic it saves.
+- ``impl='auto'``      — pallas on TPU, streaming otherwise.
+
+Both implementations share first-occurrence argmax tie-breaking with
+``jnp.argmax`` and emit confidences equal to the dense
+softmax-probability-of-argmax up to fp32 reduction order.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.select.ref import select_streaming
+from repro.kernels.select.select import select_forward
+
+IMPLS = ("auto", "pallas", "streaming")
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("softcap", "block_t", "block_v", "impl", "interpret"))
+def fused_select(hidden, w, masked, *, softcap: Optional[float] = None,
+                 block_t: int = 128, block_v: int = 512, impl: str = "auto",
+                 interpret: Optional[bool] = None):
+    """hidden: (..., d); w: (d, V); masked: (...) bool ->
+    (cand (...) int32, conf (...) fp32).
+
+    Greedy candidate = argmax over the fused logits; confidence = its
+    softmax probability; rows with ``masked == False`` (already finalized)
+    get -inf confidence, matching ``diffusion.confidence_and_candidates``
+    at temperature 0."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown fused_select impl {impl!r} "
+                         f"(expected one of {IMPLS})")
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "streaming"
+    lead = hidden.shape[:-1]
+    h2 = hidden.reshape(-1, hidden.shape[-1])
+    m2 = masked.reshape(-1)
+    if impl == "streaming":
+        cand, conf = select_streaming(h2, w, m2, softcap=softcap,
+                                      chunk=block_v)
+    else:
+        T = h2.shape[0]
+        V = w.shape[1]
+        hp = _pad_axis(h2, 0, block_t)
+        mp = _pad_axis(m2.astype(jnp.int32), 0, block_t)
+        wp = _pad_axis(w, 1, block_v)
+        cand, conf = select_forward(hp, wp, mp, v_total=V, softcap=softcap,
+                                    block_t=block_t, block_v=block_v,
+                                    interpret=interpret)
+        cand, conf = cand[:T], conf[:T]
+    return cand.reshape(lead), conf.reshape(lead)

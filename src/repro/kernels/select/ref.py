@@ -1,0 +1,67 @@
+"""Oracles for the fused select kernel.
+
+``select_ref`` is the dense baseline: full ``(T, V)`` logits, fp32 softmax,
+argmax + gather — exactly the math of ``models.layers.lm_head`` followed by
+``diffusion.confidence_and_candidates`` at temperature 0.
+
+``select_streaming`` is the same online-statistics algorithm as the Pallas
+kernel expressed as a ``lax.scan`` over vocab chunks — it never
+materializes ``(T, V)`` either, compiles on every backend, and doubles as
+the fused path on CPU (where the Pallas kernel would run interpreted).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+def _softcap(x, cap: Optional[float]):
+    return x if cap is None else cap * jnp.tanh(x / cap)
+
+
+def select_ref(hidden, w, masked, *, softcap: Optional[float] = None):
+    """hidden: (T, d); w: (d, V); masked: (T,) bool
+    -> (cand (T,) int32, conf (T,) fp32; finalized rows get -inf conf)."""
+    logits = _softcap(hidden.astype(jnp.float32) @ w.astype(jnp.float32),
+                      softcap)
+    probs = jax.nn.softmax(logits, axis=-1)
+    cand = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    conf = jnp.take_along_axis(probs, cand[:, None], axis=-1)[:, 0]
+    return cand, jnp.where(masked, conf, -jnp.inf)
+
+
+def select_streaming(hidden, w, masked, *, softcap: Optional[float] = None,
+                     chunk: int = 512):
+    """Vocab-chunked scan with running (max, sum-exp, argmax) — no (T, V)
+    intermediate. Same outputs as :func:`select_ref` up to fp reduction
+    order."""
+    T, _ = hidden.shape
+    V = w.shape[1]
+    chunk = min(chunk, V)
+    n = -(-V // chunk)
+    pad = n * chunk - V
+    wp = jnp.pad(w, ((0, 0), (0, pad))) if pad else w
+    hf = hidden.astype(jnp.float32)
+
+    def step(carry, j):
+        m, l, bi = carry
+        wj = jax.lax.dynamic_slice_in_dim(wp, j * chunk, chunk, 1)
+        lo = _softcap(hf @ wj.astype(jnp.float32), softcap)
+        vpos = j * chunk + jnp.arange(chunk)[None, :]
+        lo = jnp.where(vpos < V, lo, -jnp.inf)
+        tile_m = jnp.max(lo, axis=-1, keepdims=True)
+        tile_i = jnp.min(jnp.where(lo == tile_m, vpos, 2**31 - 1),
+                         axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, tile_m)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        l = l * alpha + jnp.sum(jnp.exp(lo - m_new), axis=-1, keepdims=True)
+        bi = jnp.where(tile_m > m, tile_i, bi)
+        return (m_new, l, bi), None
+
+    carry0 = (jnp.full((T, 1), -jnp.inf),
+              jnp.zeros((T, 1)),
+              jnp.zeros((T, 1), jnp.int32))
+    (_, l, bi), _ = jax.lax.scan(step, carry0, jnp.arange(n))
+    conf = 1.0 / l[:, 0]
+    return bi[:, 0], jnp.where(masked, conf, -jnp.inf)

@@ -24,7 +24,7 @@ def _pad_t(x, mult, fill=0):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def fused_xent(hidden, w, targets, block_t=128, block_v=512, interpret=True):
+def fused_xent(hidden, w, targets, block_t=128, block_v=512, interpret=None):
     """Per-token cross-entropy (T,) without materializing logits."""
     loss, _ = _fwd(hidden, w, targets, block_t, block_v, interpret)
     return loss

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import CompilerParams
+from repro.kernels import CompilerParams, resolve_interpret
 
 
 def _xent_kernel(h_ref, w_ref, y_ref, loss_ref, m_scr, l_scr, t_scr, *,
@@ -57,7 +57,7 @@ def _xent_kernel(h_ref, w_ref, y_ref, loss_ref, m_scr, l_scr, t_scr, *,
 
 
 def xent_forward(hidden, w, targets, *, block_t: int = 128,
-                 block_v: int = 512, interpret: bool = True):
+                 block_v: int = 512, interpret=None):
     """hidden: (T, d); w: (d, V); targets: (T,) int32 -> loss (T,) fp32.
 
     T must be a multiple of block_t, V of block_v (ops.py pads)."""
@@ -85,5 +85,5 @@ def xent_forward(hidden, w, targets, *, block_t: int = 128,
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(hidden, w, targets)

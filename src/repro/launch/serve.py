@@ -32,6 +32,11 @@ def main():
                     help="paged + continuous only: decode through the "
                          "Pallas page-table flash-decode kernel instead of "
                          "the bit-exact gather path (interpret mode on CPU)")
+    ap.add_argument("--fused-select", action="store_true",
+                    help="fused unembed + online-softmax candidate "
+                         "selection (repro.kernels.select): decode skips "
+                         "the lm_head and never materializes (b, ., V) "
+                         "logits; greedy decoding only")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--threshold", type=float, default=0.9)
@@ -66,7 +71,8 @@ def main():
                         conf_threshold=args.threshold,
                         scheduler=args.scheduler,
                         cache_layout=args.cache_layout,
-                        page_pool_pages=args.pool_pages)
+                        page_pool_pages=args.pool_pages,
+                        fused_select=args.fused_select)
     kw = {"use_paged_kernel": True} if args.paged_kernel else {}
     eng = make_engine(params, common.CFG, serve,
                       prompt_len=common.TASK.prompt_len, **kw)

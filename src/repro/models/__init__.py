@@ -1,1 +1,6 @@
-from repro.models.transformer import ModelOutput, forward, init_model  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    ModelOutput,
+    forward,
+    init_model,
+    unembed_matrix,
+)

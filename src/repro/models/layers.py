@@ -295,7 +295,14 @@ def embed_tokens(params, tokens, cfg: ModelConfig):
     return x
 
 
+def unembed_w(params, cfg: ModelConfig):
+    """The (d, V) unembedding matrix ``lm_head`` applies (tied: transposed
+    view of the token embedding). Consumed directly by the fused
+    unembed+select decode kernel (``repro.kernels.select``)."""
+    return params["tok"].T if cfg.tie_embeddings else params["head"]
+
+
 def lm_head(params, x, cfg: ModelConfig):
-    w = params["tok"].T if cfg.tie_embeddings else params["head"]
-    logits = jnp.einsum("bld,dv->blv", x, w, preferred_element_type=jnp.float32)
+    logits = jnp.einsum("bld,dv->blv", x, unembed_w(params, cfg),
+                        preferred_element_type=jnp.float32)
     return softcap(logits, cfg.final_logit_softcap)

@@ -43,10 +43,18 @@ from repro.models import rwkv6 as R
 
 
 class ModelOutput(NamedTuple):
-    logits: jnp.ndarray            # (b, Lq, vocab) fp32
+    logits: Optional[jnp.ndarray]  # (b, Lq, vocab) fp32; None when the
+    #                                caller asked for return_logits=False
+    #                                (fused-select decode reads hidden)
     hidden: jnp.ndarray            # (b, Lq, d) last hidden (post final norm)
     emissions: Any                 # per-slot stacked cache/state emissions
     aux_loss: jnp.ndarray          # MoE load-balance aux (scalar fp32)
+
+
+def unembed_matrix(params, cfg: ModelConfig):
+    """The (d, V) matrix ``lm_head`` would multiply by — handed to the
+    fused unembed+select kernel so decode never materializes logits."""
+    return L.unembed_w(params["embed"], cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -346,6 +354,7 @@ def forward(
     remat: bool = False,
     unroll_layers: bool = False,
     logits_slice: Optional[Tuple[int, int]] = None,
+    return_logits: bool = True,
     moe_dropless: Optional[bool] = None,
 ) -> ModelOutput:
     """Run the model.
@@ -420,6 +429,12 @@ def forward(
                                    unroll=unroll_layers)
 
     hidden = L.apply_norm(params["final_norm"], x, cfg)
+    # return_logits=False: the fused-select decode mode — the caller
+    # consumes hidden (+ unembed_matrix) through the streaming selection
+    # kernel, so the (b, Lq, V) logits tensor is never built.
+    if not return_logits:
+        return ModelOutput(logits=None, hidden=hidden, emissions=emissions,
+                           aux_loss=aux)
     # perf: the CDLM losses only consume generation-span logits — slicing
     # before the lm_head avoids materializing (b, L, V) over the prompt half
     # (EXPERIMENTS.md §Perf iteration 1).

@@ -10,6 +10,13 @@ Per-decoding-step FLOPs and HBM traffic for three inference regimes:
 - block-wise DLM (CDLM): B tokens/step against cached prefix -> AI ~ B at
               bs=1, crossing the ridge at small batch.
 
+Once the KV cache lands, the block-wise step's residual HBM hog is the
+dense lm_head's (T, V) logits round-trip; ``fused_select=True`` accounts
+the fused unembed + online-softmax selection kernel
+(``repro.kernels.select``) instead — same unembed FLOPs and weight read,
+but only per-token (id, confidence) traffic on the activation side. The
+paper-target columns below keep the dense default.
+
 The accounting follows the paper's references (Tiwari et al. 2025; Kim et
 al. 2025): matmul FLOPs = 2·m·n·k; every GEMM reads A and W and writes C;
 attention reads/writes scores and the KV stream; norm/activation traffic is
@@ -55,13 +62,23 @@ def param_bytes(m: AIModelConfig) -> float:
 
 def step_cost(m: AIModelConfig, *, q_tokens: int, ctx_tokens: int,
               batch: int, causal_frac: float = 1.0,
-              kv_cached: bool = True) -> Dict[str, float]:
+              kv_cached: bool = True,
+              fused_select: bool = False) -> Dict[str, float]:
     """FLOPs + HBM bytes for one decoding step processing ``q_tokens`` new
     positions against ``ctx_tokens`` of context per sequence.
 
     kv_cached=False (vanilla DLM) recomputes K/V for the whole context
     instead of streaming it from cache (the cost is then inside q_tokens =
-    ctx_tokens and ctx reads count activation traffic, not cache)."""
+    ctx_tokens and ctx reads count activation traffic, not cache).
+
+    fused_select=True models the fused unembed + online-softmax selection
+    kernel (``repro.kernels.select``): decode arithmetic intensity then
+    counts the fused selection instead of a dense lm_head — the unembed
+    FLOPs and weight read are unchanged, but the ``T × V`` logits tensor is
+    never written to (or re-read from) HBM; only per-token (candidate id,
+    confidence) pairs come back. At V ≳ 100k this removes the largest
+    activation of the cached block-wise step and pushes its AI well past
+    the dense-lm_head figure (paper Fig. 4 baselines keep the default)."""
     d, hd = m.d_model, m.d_model // m.n_heads
     nq, nkv = m.n_heads, m.n_kv_heads
     B = m.dtype_bytes
@@ -103,9 +120,12 @@ def step_cost(m: AIModelConfig, *, q_tokens: int, ctx_tokens: int,
         bytes_ += m.n_layers * batch * q_tokens * kv_bytes_per_tok    # write
     # (vanilla recompute: K/V activations already counted above)
 
-    # lm head on the q tokens
+    # lm head on the q tokens: W is read either way; the dense path also
+    # round-trips (T, V) logits through HBM, the fused select kernel emits
+    # only an int32 candidate + fp32 confidence per token
     flops += 2 * d * m.vocab * T
-    bytes_ += (m.vocab * d) * B + T * m.vocab * B
+    bytes_ += (m.vocab * d) * B
+    bytes_ += T * 8 if fused_select else T * m.vocab * B
 
     return {"flops": flops, "bytes": bytes_, "ai": flops / bytes_}
 
@@ -123,10 +143,11 @@ def vanilla_dlm_ai(m: AIModelConfig, batch: int, L_p=512, L_g=256) -> float:
 
 
 def blockwise_dlm_ai(m: AIModelConfig, batch: int, block: int,
-                     L_p=512, L_g=256) -> float:
+                     L_p=512, L_g=256, fused_select: bool = False) -> float:
     ctx = L_p + L_g // 2
     return step_cost(m, q_tokens=block, ctx_tokens=ctx, batch=batch,
-                     causal_frac=1.0, kv_cached=True)["ai"]
+                     causal_frac=1.0, kv_cached=True,
+                     fused_select=fused_select)["ai"]
 
 
 def attainable_tflops(ai: float, hw: HardwareConfig = A100) -> float:

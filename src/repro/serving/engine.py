@@ -62,7 +62,7 @@ from repro.core.block_loop import (
     lane_block_forward,
 )
 from repro.core.sampler import SAMPLERS
-from repro.models import forward
+from repro.models import forward, unembed_matrix
 
 
 @dataclasses.dataclass
@@ -117,7 +117,8 @@ class Engine:
             block_size=serve.block_size, conf_threshold=serve.conf_threshold,
             temperature=serve.temperature,
             cache_refresh_interval=serve.cache_refresh_interval,
-            pos_offset=pos_offset, cache_layout=serve.cache_layout)
+            pos_offset=pos_offset, cache_layout=serve.cache_layout,
+            fused_select=serve.fused_select)
         sampler = SAMPLERS[serve.sampler]
         kwargs = {}
         if serve.sampler == "cdlm" and use_long_window:
@@ -236,7 +237,11 @@ class ContinuousEngine:
             prompt_len=prompt_len, gen_len=serve.gen_length,
             block_size=serve.block_size, conf_threshold=serve.conf_threshold,
             temperature=serve.temperature, early_stop=True,
-            cache_layout=serve.cache_layout)
+            cache_layout=serve.cache_layout, fused_select=serve.fused_select)
+        # fused unembed+select decode: lane forwards skip the lm_head and
+        # candidates/confidences come from the vocab-tiled selection kernel
+        # — no (b, B, V) logits in the refinement loop
+        self._fused = serve.fused_select
         self.n_lanes = serve.max_batch
         self.paged = serve.cache_layout == C.PAGED
         P, B = prompt_len, serve.block_size
@@ -316,7 +321,8 @@ class ContinuousEngine:
                                 spec.prompt_len + spec.block_size)
         out = forward(params, tokens[:, :spec.prompt_len], cfg=cfg,
                       mode=masks.BLOCK_CAUSAL, prompt_len=spec.full_prompt_len,
-                      block_size=spec.block_size, attn_impl=spec.attn_impl)
+                      block_size=spec.block_size, attn_impl=spec.attn_impl,
+                      return_logits=False)
         cache = C.commit_rows(cache, out.emissions, 0, admit)
         return state._replace(
             tokens=tokens, cache=cache,
@@ -373,13 +379,19 @@ class ContinuousEngine:
         def body(st):
             tokens, steps, calls, key, it = st
             key, sub = jax.random.split(key)
-            logits, _ = lane_block_forward(
+            net, _ = lane_block_forward(
                 params, tokens, starts, state.cache, cfg=cfg, spec=spec,
                 use_long_window=self._use_long_window,
-                paged_attention_fn=self._paged_attention_fn)
+                paged_attention_fn=self._paged_attention_fn,
+                return_hidden=self._fused)
             bt = slice_blocks(tokens)
-            cand, conf = D.confidence_and_candidates(
-                logits, bt, cfg.mask_token_id, spec.temperature, sub)
+            if self._fused:
+                cand, conf = D.confidence_and_candidates_fused(
+                    net, unembed_matrix(params, cfg), bt, cfg.mask_token_id,
+                    spec.temperature, sub, softcap=cfg.final_logit_softcap)
+            else:
+                cand, conf = D.confidence_and_candidates(
+                    net, bt, cfg.mask_token_id, spec.temperature, sub)
             sel = D.select_threshold_in_block(conf, all_block,
                                               spec.conf_threshold)
             active = jnp.any(bt == cfg.mask_token_id, axis=-1) & live
@@ -394,11 +406,12 @@ class ContinuousEngine:
              jnp.zeros((), jnp.int32)))
 
         # commit pass: recompute the finalized blocks' KV exactly, only for
-        # the lanes that ran, each at its own offset
+        # the lanes that ran, each at its own offset (only emissions are
+        # consumed, so the lm_head is always skipped here)
         _, emissions = lane_block_forward(
             params, tokens, starts, state.cache, cfg=cfg, spec=spec,
             use_long_window=self._use_long_window,
-            paged_attention_fn=self._paged_attention_fn)
+            paged_attention_fn=self._paged_attention_fn, return_hidden=True)
         cache = C.commit_rows(state.cache, emissions, starts, live)
         calls = calls + 1
 
