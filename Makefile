@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-fast bench bench-smoke lint
+.PHONY: verify verify-fast bench bench-smoke serve-smoke lint
 
 # tier-1 suite (ROADMAP.md): must stay green
 verify:
@@ -21,6 +21,12 @@ bench:
 bench-smoke:
 	$(PYTHON) -m benchmarks.bench_serving --smoke --json BENCH_serving.json
 	$(PYTHON) -m benchmarks.bench_kernels --smoke --json BENCH_kernels.json
+
+# HTTP serving smoke: boot the stdlib /v1/completions frontend on a tiny
+# random-init engine, run one streamed + one non-streamed completion via
+# urllib, assert token-identical to Engine.generate (CI: serve-smoke job)
+serve-smoke:
+	$(PYTHON) -m benchmarks.serve_smoke
 
 # requires ruff (pip install ruff); rules configured in pyproject.toml
 lint:

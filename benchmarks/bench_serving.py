@@ -83,11 +83,14 @@ def _kv_page_bytes():
 
 
 def run_schedulers(params, csv_rows=None, results=None, n_requests=96,
-                   max_batch=4, rate_hz=1000.0):
-    """Static vs continuous scheduling (dense layout)."""
+                   max_batch=4, rate_hz=1000.0, sampled_frac=0.0):
+    """Static vs continuous scheduling (dense layout). ``sampled_frac``
+    mixes per-request sampled lanes (temperature 0.7) into the trace —
+    both schedulers serve them through the per-lane params path."""
     from repro.serving import ContinuousEngine, Engine
 
-    reqs = common.poisson_trace(n=n_requests, rate_hz=rate_hz, seed=0)
+    reqs = common.poisson_trace(n=n_requests, rate_hz=rate_hz, seed=0,
+                                sampled_frac=sampled_frac)
     kw = dict(block_size=common.CDLM_CFG.block_size,
               gen_length=common.TASK.gen_len, sampler="cdlm",
               conf_threshold=0.9, max_batch=max_batch)
@@ -98,11 +101,14 @@ def run_schedulers(params, csv_rows=None, results=None, n_requests=96,
     cont_eng = ContinuousEngine(params, common.CFG,
                                 ServeConfig(scheduler="continuous", **kw),
                                 prompt_len=common.TASK.prompt_len)
-    static_eng.warmup()
-    cont_eng.warmup()
+    # sampled traces hit the per-lane jit variants: precompile them so
+    # the timed region measures scheduling, not one-off compiles
+    static_eng.warmup(per_request=sampled_frac > 0)
+    cont_eng.warmup(per_request=sampled_frac > 0)
 
+    mix = (f", {sampled_frac:.0%} sampled lanes" if sampled_frac else "")
     print(f"\n== serving schedulers ({n_requests} reqs, Poisson "
-          f"{rate_hz:.0f}/s, batch {max_batch}, mixed max_tokens) ==")
+          f"{rate_hz:.0f}/s, batch {max_batch}, mixed max_tokens{mix}) ==")
     print(f"{'scheduler':12s} {'tok/s':>9} {'makespan':>10} {'p50 lat':>9} "
           f"{'p95 lat':>9} {'tokens':>7}")
 
@@ -213,11 +219,12 @@ def run_layouts(params, csv_rows=None, results=None, n_requests=64,
 
 
 def run(csv_rows=None, n_requests=96, max_batch=4, rate_hz=1000.0,
-        results=None, params=None, layouts=True, budget_pages=12):
+        results=None, params=None, layouts=True, budget_pages=12,
+        sampled_frac=0.0):
     params = params if params is not None else common.get_student()
     speedup = run_schedulers(params, csv_rows=csv_rows, results=results,
                              n_requests=n_requests, max_batch=max_batch,
-                             rate_hz=rate_hz)
+                             rate_hz=rate_hz, sampled_frac=sampled_frac)
     if layouts:
         run_layouts(params, csv_rows=csv_rows, results=results,
                     n_requests=max(8, n_requests * 2 // 3), rate_hz=rate_hz,
@@ -239,6 +246,10 @@ def main(argv=None):
                          "run dense-vs-paged at a fixed page budget")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--budget-pages", type=int, default=12)
+    ap.add_argument("--sampled-frac", type=float, default=0.0,
+                    help="share of trace requests carrying per-request "
+                         "SamplingParams (temperature 0.7, own seed) — "
+                         "exercises mixed greedy/sampled batches")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -251,10 +262,11 @@ def main(argv=None):
         params = common.get_student()
         n_requests = args.requests or 96
 
-    results = {"smoke": args.smoke, "n_requests": n_requests}
+    results = {"smoke": args.smoke, "n_requests": n_requests,
+               "sampled_frac": args.sampled_frac}
     run(results=results, params=params, n_requests=n_requests,
         layouts=args.cache_layout in ("paged", "both"),
-        budget_pages=args.budget_pages)
+        budget_pages=args.budget_pages, sampled_frac=args.sampled_frac)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)

@@ -88,20 +88,29 @@ def get_student(teacher=None, dataset=None, *, weights=None, steps=None,
     return student
 
 
-def poisson_trace(n=48, rate_hz=60.0, seed=0, short_frac=0.5):
+def poisson_trace(n=48, rate_hz=60.0, seed=0, short_frac=0.5,
+                  sampled_frac=0.0):
     """Serving-bench request trace: Poisson arrivals over the eval split with
     mixed per-request generation caps (a ``short_frac`` share capped at one
-    block, the rest at the full ``gen_len``)."""
-    from repro.serving import Request
+    block, the rest at the full ``gen_len``). A ``sampled_frac`` share
+    carries per-request ``SamplingParams`` (temperature 0.7, own seed), so
+    the trace exercises mixed greedy/sampled continuous batches."""
+    from repro.serving import Request, SamplingParams
     rng = np.random.default_rng(seed)
+    # separate stream for the sampled-lane draws: the arrival/max_tokens
+    # mix at a given seed stays identical to previously recorded traces
+    # (BENCH_serving.json trajectories) regardless of sampled_frac
+    srng = np.random.default_rng(seed + 0x5EED)
     ev = corpus().eval_batch(n)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n))
     B = CDLM_CFG.block_size
     reqs = []
     for i in range(n):
         mt = B if rng.random() < short_frac else TASK.gen_len
+        sp = (SamplingParams(temperature=0.7, seed=i)
+              if srng.random() < sampled_frac else None)
         reqs.append(Request(prompt=ev["prompt"][i], id=i, max_tokens=int(mt),
-                            arrival_s=float(arrivals[i])))
+                            arrival_s=float(arrivals[i]), params=sp))
     return reqs
 
 

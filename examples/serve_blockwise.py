@@ -14,7 +14,17 @@ and queued requests admitted mid-flight. Its API mirrors ``Engine``
 ``Request.arrival_s`` (trace replay offset) — and true per-request
 latency/queueing in each ``Response``.
 
+Both engines expose the request-level incremental API
+(``add_request()`` / ``step()`` / ``stream()`` / ``abort()``) with
+per-request ``SamplingParams``; ``--stream`` demos block-at-a-time
+streaming (blocks print the moment they commit — block-causal
+finalization means a printed block never changes), and ``--http`` boots
+the stdlib HTTP frontend (OpenAI-style ``/v1/completions`` with SSE,
+``/healthz``, ``/metrics``) over the CDLM student.
+
     PYTHONPATH=src python examples/serve_blockwise.py [--sampler cdlm]
+    PYTHONPATH=src python examples/serve_blockwise.py --stream
+    PYTHONPATH=src python examples/serve_blockwise.py --http --port 8000
 """
 import argparse
 import os
@@ -40,6 +50,13 @@ def main():
                              "interval_cache", "cdlm"])
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--stream", action="store_true",
+                    help="demo exact block-at-a-time streaming through the "
+                         "continuous engine (cdlm student)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve the cdlm student over HTTP "
+                         "(/v1/completions + SSE) instead of the table")
+    ap.add_argument("--port", type=int, default=8000)
     args = ap.parse_args()
 
     print("loading/training assets (cached under experiments/bench_assets)...")
@@ -47,6 +64,27 @@ def main():
     student = common.get_student(teacher)
     ev = common.corpus().eval_batch(args.requests)
     reqs = [Request(prompt=p, id=i) for i, p in enumerate(ev["prompt"])]
+
+    if args.http or args.stream:
+        serve = ServeConfig(max_batch=args.batch,
+                            block_size=common.CDLM_CFG.block_size,
+                            gen_length=common.TASK.gen_len, sampler="cdlm",
+                            scheduler="continuous")
+        eng = make_engine(student, common.CFG, serve,
+                          prompt_len=common.TASK.prompt_len)
+        eng.warmup(per_request=args.http)
+        if args.http:
+            from repro.serving.server import serve_http
+            print(f"serving /v1/completions on http://127.0.0.1:{args.port} "
+                  f"(prompt_len={common.TASK.prompt_len}) — Ctrl-C to stop")
+            serve_http(eng, "127.0.0.1", args.port)
+            return
+        print("streaming blocks as they commit (id:block -> tokens):")
+        for ev_ in eng.stream(reqs[:args.batch + 2]):
+            tag = " <done>" if ev_.finished else ""
+            print(f"  {ev_.request_id}:{ev_.index} -> "
+                  f"{np.asarray(ev_.tokens).tolist()}{tag}")
+        return
 
     samplers = (["vanilla", "fast_dllm", "dual_cache", "interval_cache",
                  "cdlm"] if args.sampler == "all" else [args.sampler])

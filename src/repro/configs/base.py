@@ -248,6 +248,11 @@ class ServeConfig:
     max_batch: int = 8
     block_size: int = 32
     gen_length: int = 256
+    # conf_threshold / temperature are the *engine defaults*: every request
+    # may override them per-request via repro.serving.SamplingParams (unset
+    # fields inherit these values). One continuous batch can mix greedy and
+    # sampled lanes — per-lane RNG streams keep each lane bit-identical to
+    # its isolated decode.
     conf_threshold: float = 0.9
     temperature: float = 0.0
     sampler: str = "cdlm"            # vanilla|fast_dllm|dual_cache|interval_cache|cdlm|ar
@@ -264,8 +269,13 @@ class ServeConfig:
     # Fused unembed + online-softmax candidate selection
     # (repro.kernels.select): decode forwards skip the lm_head and no
     # (b, ·, V) logits tensor is materialized. Greedy (temperature 0) only;
-    # sampled decoding silently keeps the baseline logits path.
+    # sampled decoding silently keeps the baseline logits path (in the
+    # continuous engine: any step whose batch contains a sampled lane).
     fused_select: bool = False
+    # HTTP frontend (repro.serving.server): bind address for the
+    # OpenAI-style /v1/completions endpoint (launch.serve --http).
+    http_host: str = "127.0.0.1"
+    http_port: int = 8000
 
 
 @dataclass(frozen=True)

@@ -53,6 +53,25 @@ class SampleResult(NamedTuple):
     gen_lengths: jnp.ndarray    # (b,) tokens before EOS
 
 
+class LaneParams(NamedTuple):
+    """Per-lane (= per-request) sampling parameters, threaded through the
+    threshold decode loops as runtime ``(b,)`` arrays so one batch can mix
+    requests with different knobs without recompiling per combination.
+
+    Selection semantics per lane: ``temperature <= 0`` lanes take the
+    greedy argmax, ``temperature > 0`` lanes draw categorically with their
+    *own* PRNG key (``key (b, 2)`` uint32, advanced only on the lane's own
+    active iterations — see :func:`repro.core.diffusion.split_lane_keys`),
+    so every lane decodes bit-identically to its isolated decode regardless
+    of batch composition. ``conf_threshold`` is the per-lane τ of the
+    threshold finalize rule; ``eos_id`` the per-lane stop token.
+    """
+    temperature: jnp.ndarray    # (b,) float32
+    conf_threshold: jnp.ndarray  # (b,) float32
+    eos_id: jnp.ndarray         # (b,) int32
+    key: jnp.ndarray            # (b, 2) uint32 per-lane PRNG keys
+
+
 @dataclasses.dataclass(frozen=True)
 class SamplerSpec:
     prompt_len: int             # text prompt tokens in the canvas
@@ -135,9 +154,14 @@ def init_canvas(prompt_tokens, spec: SamplerSpec, cfg: ModelConfig):
     return jnp.concatenate([prompt_tokens, gen], axis=1)
 
 
-def _gen_lengths(tokens, spec: SamplerSpec, cfg: ModelConfig):
+def _gen_lengths(tokens, spec: SamplerSpec, cfg: ModelConfig, eos_id=None):
+    """Tokens before EOS per lane; ``eos_id`` optionally overrides the
+    config stop token with a per-lane ``(b,)`` array (per-request eos)."""
     gen = tokens[:, spec.prompt_len:]
-    is_eos = gen == cfg.eos_token_id
+    if eos_id is None:
+        is_eos = gen == cfg.eos_token_id
+    else:
+        is_eos = gen == jnp.asarray(eos_id)[:, None]
     has = jnp.any(is_eos, axis=-1)
     first = jnp.argmax(is_eos, axis=-1)
     return jnp.where(has, first, spec.gen_len)
@@ -217,6 +241,48 @@ def _threshold_block_update(params, cfg, spec, tokens, out, start, key,
     cand, conf = _block_candidates(params, cfg, spec, out, start, bt, key)
     sel = D.select_threshold_in_block(conf, jnp.ones((1, B), bool),
                                       spec.conf_threshold)
+    sel = sel & active[:, None]
+    bt = jnp.where(sel, cand.astype(bt.dtype), bt)
+    return jax.lax.dynamic_update_slice_in_dim(tokens, bt, start, 1)
+
+
+def _block_candidates_per_lane(params, cfg, spec, out, start, block_tokens,
+                               lanes: LaneParams, subs, *, fused: bool,
+                               sampled: bool):
+    """(cand, conf) for the active block under per-lane sampling params.
+
+    ``fused`` (all-greedy batches only) routes through the fused
+    unembed+select kernel exactly like the scalar path; otherwise
+    selection is per-lane: greedy lanes argmax, sampled lanes draw with
+    their own key (``subs (b, 2)``)."""
+    B = spec.block_size
+    if fused:
+        h = out.hidden
+        if h.shape[1] != B:
+            h = jax.lax.dynamic_slice_in_dim(h, start, B, 1)
+        return D.confidence_and_candidates_fused(
+            h, unembed_matrix(params, cfg), block_tokens, cfg.mask_token_id,
+            0.0, None, softcap=cfg.final_logit_softcap)
+    logits = out.logits
+    if logits.shape[1] != B:
+        logits = jax.lax.dynamic_slice_in_dim(logits, start, B, 1)
+    return D.confidence_and_candidates_per_lane(
+        logits, block_tokens, cfg.mask_token_id, lanes.temperature,
+        subs if sampled else None)
+
+
+def _threshold_lane_update(params, cfg, spec, tokens, out, start, lanes,
+                           subs, active, *, fused: bool, sampled: bool):
+    """Block-coordinate threshold finalization with per-lane (b,) params:
+    per-lane temperature drives greedy-vs-sampled candidates, per-lane τ
+    drives the threshold selection."""
+    B = spec.block_size
+    bt = jax.lax.dynamic_slice_in_dim(tokens, start, B, 1)
+    cand, conf = _block_candidates_per_lane(params, cfg, spec, out, start,
+                                            bt, lanes, subs, fused=fused,
+                                            sampled=sampled)
+    sel = D.select_threshold_in_block(conf, jnp.ones((1, B), bool),
+                                      lanes.conf_threshold[:, None])
     sel = sel & active[:, None]
     bt = jnp.where(sel, cand.astype(bt.dtype), bt)
     return jax.lax.dynamic_update_slice_in_dim(tokens, bt, start, 1)
@@ -323,7 +389,8 @@ def _top1_loop(params, prompt_tokens, *, cfg, spec, strategy, key, extras,
 # Finalization family: threshold (Fast-dLLM / cache baselines / CDLM)
 # ---------------------------------------------------------------------------
 def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
-                    extras, use_long_window):
+                    extras, use_long_window, lane_params=None,
+                    lane_sampled=False):
     tokens = init_canvas(prompt_tokens, spec, cfg)
     b, T = tokens.shape
     P, B, off = spec.prompt_len, spec.block_size, spec.pos_offset
@@ -334,10 +401,15 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
     R = spec.cache_refresh_interval
     done = jnp.zeros((b,), bool)
     steps = jnp.zeros((b,), jnp.int32)
-    # greedy: block-coordinate selection (and, with spec.fused_select,
-    # hidden-only decode forwards); sampled: seed canvas path (RNG compat)
-    blockwise = spec.temperature <= 0
-    fused = spec.fused_select and blockwise
+    # lanes: per-request (b,) params — always block-coordinate selection,
+    # per-lane RNG streams (lane_sampled: any lane draws categorically).
+    # scalar greedy: block-coordinate selection (and, with
+    # spec.fused_select, hidden-only decode forwards); scalar sampled:
+    # seed canvas path (RNG compat)
+    lanes = lane_params is not None
+    blockwise = True if lanes else spec.temperature <= 0
+    fused = spec.fused_select and (not lane_sampled if lanes else blockwise)
+    key_state = lane_params.key if lanes else key
 
     if policy == "none":
         kv_cache = None
@@ -386,7 +458,12 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
 
         def body(st):
             tokens, kv_cache, steps, calls, key, done, it = st
-            key, sub = jax.random.split(key)
+            active = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :],
+                             axis=-1) & ~done
+            if lanes:
+                key, sub = D.split_lane_keys(key, active)
+            else:
+                key, sub = jax.random.split(key)
             if policy == "approx-interval":
                 kv_cache = jax.lax.cond(
                     (it % R) == (R - 1),
@@ -399,9 +476,12 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
                                    return_logits=not fused)
             else:
                 out = block_out(tokens, kv_cache)
-            active = jnp.any((tokens == cfg.mask_token_id) & bmask[None, :],
-                             axis=-1) & ~done
-            if blockwise:
+            if lanes:
+                tokens = _threshold_lane_update(params, cfg, spec, tokens,
+                                                out, start, lane_params, sub,
+                                                active, fused=fused,
+                                                sampled=lane_sampled)
+            elif blockwise:
                 tokens = _threshold_block_update(params, cfg, spec, tokens,
                                                  out, start, sub, active)
             else:
@@ -418,9 +498,9 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
             return (tokens, kv_cache, steps + active.astype(jnp.int32),
                     calls + 1, key, done, it + 1)
 
-        tokens, kv_cache, steps, calls, key, done, _ = jax.lax.while_loop(
+        tokens, kv_cache, steps, calls, key_state, done, _ = jax.lax.while_loop(
             cond, body,
-            (tokens, kv_cache, steps, calls, key, done,
+            (tokens, kv_cache, steps, calls, key_state, done,
              jnp.zeros((), jnp.int32)))
 
         if policy == "exact-commit":
@@ -430,10 +510,14 @@ def _threshold_loop(params, prompt_tokens, *, cfg, spec, strategy, key,
             calls = calls + 1
 
         if spec.early_stop:
-            done = done | jnp.any(
-                (tokens == cfg.eos_token_id) & bmask[None, :], -1)
+            eos = (lane_params.eos_id[:, None] if lanes
+                   else cfg.eos_token_id)
+            done = done | jnp.any((tokens == eos) & bmask[None, :], -1)
 
-    return SampleResult(tokens, steps, calls, _gen_lengths(tokens, spec, cfg))
+    return SampleResult(tokens, steps, calls,
+                        _gen_lengths(tokens, spec, cfg,
+                                     eos_id=(lane_params.eos_id if lanes
+                                             else None)))
 
 
 # ---------------------------------------------------------------------------
@@ -481,14 +565,27 @@ def _greedy_next_loop(params, prompt_tokens, *, cfg, spec, strategy, extras):
 def run_block_loop(params, prompt_tokens, *, cfg: ModelConfig,
                    spec: SamplerSpec, strategy: DecodeStrategy, key=None,
                    extras=None, record_hidden: bool = False,
-                   use_long_window: bool = False):
+                   use_long_window: bool = False,
+                   lane_params: LaneParams | None = None,
+                   lane_sampled: bool = False):
     """Decode ``prompt_tokens`` with ``strategy`` over the static block grid.
 
     Returns :class:`SampleResult`; with ``record_hidden`` (``top1``
     finalization only) also the trajectory encoding ``(finalized_at, H)``.
+
+    ``lane_params`` switches the threshold loop to per-lane (b,) sampling
+    parameters (temperature / conf_threshold / eos / PRNG key per request);
+    ``lane_sampled`` is the static flag for whether any lane draws
+    categorically (it decides whether logits-bearing forwards are traced).
+    Only threshold-finalize strategies support per-lane params.
     """
     extras = extras or {}
     key = key if key is not None else jax.random.PRNGKey(0)
+    if lane_params is not None and strategy.finalize != "threshold":
+        raise ValueError(
+            "per-request sampling params (lane_params) require a "
+            f"threshold-finalize strategy; {strategy.name!r} uses "
+            f"{strategy.finalize!r}")
     if spec.cache_layout != C.DENSE and strategy.cache_policy != "exact-commit":
         raise ValueError(
             f"cache_layout={spec.cache_layout!r} requires the 'exact-commit' "
@@ -506,7 +603,9 @@ def run_block_loop(params, prompt_tokens, *, cfg: ModelConfig,
     if strategy.finalize == "threshold":
         return _threshold_loop(params, prompt_tokens, cfg=cfg, spec=spec,
                                strategy=strategy, key=key, extras=extras,
-                               use_long_window=use_long_window)
+                               use_long_window=use_long_window,
+                               lane_params=lane_params,
+                               lane_sampled=lane_sampled)
     return _greedy_next_loop(params, prompt_tokens, cfg=cfg, spec=spec,
                              strategy=strategy, extras=extras)
 

@@ -102,6 +102,50 @@ def confidence_and_candidates_fused(hidden, w, tokens, mask_id: int,
                         impl=impl, interpret=interpret)
 
 
+def split_lane_keys(keys, active):
+    """Advance per-lane PRNG keys, but only for ``active`` lanes.
+
+    keys: (b, 2) uint32 per-lane keys; active: (b,) bool.
+    Returns ``(new_keys, subkeys)``. A lane's key stream advances exactly
+    once per *active* refinement iteration, so the stream a request sees is
+    a function of its own decode history only — independent of batch
+    neighbors, scheduler and batch size. Inactive lanes keep their key
+    (their subkey is garbage, and must be masked out by the caller).
+    """
+    pairs = jax.vmap(jax.random.split)(keys)          # (b, 2, 2)
+    new_keys = jnp.where(active[:, None], pairs[:, 0], keys)
+    return new_keys, pairs[:, 1]
+
+
+def confidence_and_candidates_per_lane(logits, tokens, mask_id: int,
+                                       temperatures, keys=None):
+    """Per-lane variant of :func:`confidence_and_candidates`.
+
+    temperatures: (b,) per-lane sampling temperature — lanes with
+    ``temperature <= 0`` take the greedy argmax, lanes with
+    ``temperature > 0`` draw from ``softmax(logits / T)`` using their *own*
+    PRNG key from ``keys (b, 2)`` (vmapped ``jax.random.categorical``, so a
+    lane's draw depends only on its own logits and key — one continuous
+    batch can mix greedy and sampled lanes while every lane stays
+    bit-identical to its isolated decode). Confidence is the probability of
+    the candidate under the temperature-1 distribution, as in the scalar
+    path; ``keys=None`` skips the draws entirely (all-greedy batch).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    if keys is None:
+        cand = greedy
+    else:
+        t = jnp.maximum(temperatures, 1e-6)
+        scaled = logits.astype(jnp.float32) / t[:, None, None]
+        drawn = jax.vmap(jax.random.categorical)(keys, scaled)
+        cand = jnp.where((temperatures > 0.0)[:, None], drawn, greedy)
+    conf = jnp.take_along_axis(probs, cand[..., None], axis=-1)[..., 0]
+    is_masked = tokens == mask_id
+    conf = jnp.where(is_masked, conf, -jnp.inf)
+    return cand, conf
+
+
 def select_topk_in_block(conf, block_mask, k: int = 1):
     """Boolean selection of the top-k confident positions within the active
     block (vanilla low-confidence-remasking unmasks top-1 per step)."""
@@ -118,9 +162,10 @@ def select_topk_in_block(conf, block_mask, k: int = 1):
     return sel
 
 
-def select_threshold_in_block(conf, block_mask, tau: float):
+def select_threshold_in_block(conf, block_mask, tau):
     """Fast-dLLM / CDLM §4.3: every position with conf >= tau, but always at
-    least the single most-confident masked position."""
+    least the single most-confident masked position. ``tau`` may be a scalar
+    or a per-lane ``(b, 1)`` array (per-request confidence thresholds)."""
     masked_conf = jnp.where(block_mask, conf, -jnp.inf)
     above = masked_conf >= tau
     top1 = select_topk_in_block(conf, block_mask, 1)

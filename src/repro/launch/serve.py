@@ -4,6 +4,14 @@ static or the continuous block-level batching scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --sampler cdlm --requests 32
     PYTHONPATH=src python -m repro.launch.serve --scheduler continuous
+
+With ``--http`` the engine is exposed through the stdlib HTTP frontend
+(``repro.serving.server``) instead of replaying a local batch: an
+OpenAI-style ``POST /v1/completions`` (SSE streaming and non-streaming),
+``GET /healthz`` and ``GET /metrics``:
+
+    PYTHONPATH=src python -m repro.launch.serve --scheduler continuous \
+        --http --port 8000
 """
 import argparse
 import os
@@ -42,6 +50,14 @@ def main():
     ap.add_argument("--threshold", type=float, default=0.9)
     ap.add_argument("--ckpt", default=None,
                     help="npz checkpoint (defaults to cached bench assets)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP (/v1/completions with SSE "
+                         "streaming, /healthz, /metrics) instead of "
+                         "replaying a local request batch")
+    ap.add_argument("--host", default=None,
+                    help="HTTP bind host (default: ServeConfig.http_host)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="HTTP bind port (default: ServeConfig.http_port)")
     args = ap.parse_args()
     if args.paged_kernel and (args.scheduler != "continuous"
                               or args.cache_layout != "paged"):
@@ -76,6 +92,16 @@ def main():
     kw = {"use_paged_kernel": True} if args.paged_kernel else {}
     eng = make_engine(params, common.CFG, serve,
                       prompt_len=common.TASK.prompt_len, **kw)
+    if args.http:
+        from repro.serving.server import serve_http
+        host = args.host if args.host is not None else serve.http_host
+        port = args.port if args.port is not None else serve.http_port
+        eng.warmup(per_request=True)
+        print(f"serving /v1/completions on http://{host}:{port} "
+              f"(prompt_len={common.TASK.prompt_len}, "
+              f"scheduler={args.scheduler}) — Ctrl-C to stop")
+        serve_http(eng, host, port)
+        return
     ev = common.corpus().eval_batch(args.requests)
     reqs = [Request(prompt=p, id=i) for i, p in enumerate(ev["prompt"])]
     eng.warmup()

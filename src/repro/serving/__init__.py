@@ -1,8 +1,14 @@
+from repro.serving.api import (  # noqa: F401
+    BlockEvent,
+    GenerationOutput,
+    GenerationRequest,
+    Request,
+    Response,
+    SamplingParams,
+)
 from repro.serving.engine import (  # noqa: F401
     ContinuousEngine,
     Engine,
-    Request,
-    Response,
     efficiency_report,
     make_engine,
 )

@@ -1,13 +1,41 @@
 """Batched serving engines.
 
 Two schedulers over the unified block-decode core
-(``repro.core.block_loop``):
+(``repro.core.block_loop``), both exposing the same **request-level,
+incremental API** (types in ``repro.serving.api``):
+
+- ``add_request(GenerationRequest) -> id`` — enqueue one request
+  (engine-assigned unique id when ``id=None``);
+- ``step() -> list[BlockEvent]`` — advance one block boundary and return
+  the blocks that finalized this step (block-causal finalization means a
+  returned block is committed and will never change — the natural exact
+  streaming unit);
+- ``abort(id)`` — drop a queued or in-flight request (freeing its lane
+  and, in the paged layout, its pages) without perturbing other lanes;
+- ``has_unfinished()`` — anything queued or decoding;
+- ``stream(requests)`` — iterator yielding :class:`BlockEvent` as blocks
+  commit;
+- ``generate(requests)`` — thin drain-the-stepper wrapper returning final
+  :class:`GenerationOutput` per request (bit-identical to the historical
+  batch-synchronous behavior).
+
+Sampling parameters are **per-request** (:class:`SamplingParams`):
+temperature, confidence threshold, max_tokens, RNG seed and EOS override
+all resolve against ``ServeConfig`` defaults and are threaded through the
+decode loops as per-lane ``(b,)`` arrays
+(:class:`repro.core.block_loop.LaneParams`), so one continuous batch can
+mix greedy and sampled lanes. Sampled lanes draw with their *own* PRNG
+stream (advanced only on the lane's own active iterations), which keeps
+every lane bit-identical to its isolated decode regardless of batch
+composition — the same isolation-exactness invariant the scheduler
+already relied on for greedy lanes.
+
+The two schedulers:
 
 - :class:`Engine` — **static batching**: requests are padded into
   fixed-shape batches and each batch runs the full jitted sampler to
-  completion. Simple, works with every sampler strategy, but lanes that
-  finish early (EOS / short ``max_tokens``) burn compute as padding until
-  the whole batch drains.
+  completion. ``step()`` launches one batch and emits its block events at
+  once.
 
 - :class:`ContinuousEngine` — **continuous block-level batching**: a
   persistent decode batch of ``max_batch`` lanes advances one *block* per
@@ -30,10 +58,11 @@ The continuous engine runs over either KV layout
   pages the live lanes' next blocks need, and eviction returns a lane's
   pages to the pool. Lanes that cannot get their next page stall for a
   round; if every live lane stalls, the youngest lane is preempted (pages
-  freed, request requeued — loss-free, since re-decoding from scratch is
-  deterministic). A pool holding one full canvas is the deadlock-free
-  minimum; sizing it below ``max_batch`` full canvases is what buys
-  higher concurrency per HBM byte at mixed generation lengths.
+  freed, request requeued — loss-free, since re-decoding from the
+  request's own RNG stream is deterministic). A pool holding one full
+  canvas is the deadlock-free minimum; sizing it below ``max_batch`` full
+  canvases is what buys higher concurrency per HBM byte at mixed
+  generation lengths.
 
 Metrics follow the paper (Tables 1–2): per-request latency, TPS (valid
 tokens / wall-clock), refinement steps, generation length. The continuous
@@ -42,9 +71,8 @@ included) instead of a per-chunk average.
 """
 from __future__ import annotations
 
-import dataclasses
+import bisect
 import time
-from collections import deque
 from typing import Any, Dict, List, NamedTuple, Optional, Sequence
 
 import jax
@@ -56,38 +84,29 @@ from repro.core import cache as C
 from repro.core import diffusion as D
 from repro.core import masks
 from repro.core.block_loop import (
+    STRATEGIES,
+    LaneParams,
     SamplerSpec,
     _gen_lengths,
     init_canvas,
     lane_block_forward,
+    run_block_loop,
 )
 from repro.core.sampler import SAMPLERS
 from repro.models import forward, unembed_matrix
+from repro.serving.api import (
+    BlockEvent,
+    GenerationOutput,
+    GenerationRequest,
+    Request,  # noqa: F401  (re-exported legacy name)
+    ResolvedSamplingParams,
+    Response,  # noqa: F401  (re-exported legacy name)
+    SamplingParams,
+    normalize_requests,
+)
 
 
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray                       # (P,) int32
-    extras: Optional[Dict[str, np.ndarray]] = None
-    id: int = 0
-    max_tokens: Optional[int] = None         # per-request generation cap
-    arrival_s: float = 0.0                   # arrival offset in the trace
-
-
-@dataclasses.dataclass
-class Response:
-    id: int
-    tokens: np.ndarray                       # generated span (gen_len,)
-    gen_length: int
-    steps: int
-    # static Engine: per-sample share of batch compute time (arrival_s is
-    # not modeled); ContinuousEngine: true arrival -> completion, queueing
-    # included. Compare throughput across engines via wall-clock, not this.
-    latency_s: float
-    queue_s: float = 0.0                     # arrival -> admission (continuous)
-
-
-def _validate_requests(requests: Sequence[Request]) -> None:
+def _validate_requests(requests: Sequence[GenerationRequest]) -> None:
     keys0 = frozenset(requests[0].extras or {})
     for r in requests:
         if frozenset(r.extras or {}) != keys0:
@@ -97,8 +116,128 @@ def _validate_requests(requests: Sequence[Request]) -> None:
                 f"{r.id} has {sorted(r.extras or {})}")
 
 
-class Engine:
-    """Static fixed-shape batching over any sampler strategy."""
+def _resolve(req: GenerationRequest, serve: ServeConfig,
+             cfg: ModelConfig) -> ResolvedSamplingParams:
+    params = req.params if req.params is not None else SamplingParams()
+    return params.resolve(serve, cfg, request_id=req.id,
+                          legacy_max_tokens=req.max_tokens)
+
+
+def _validate_params(req: GenerationRequest, serve: ServeConfig) -> None:
+    """Per-request params constraints, checked at ``add_request`` time so
+    a bad request fails its own submission (HTTP 400) instead of blowing
+    up the shared decode step later.
+
+    - Non-threshold samplers have no per-lane selection loop.
+    - ``fused_select`` engines are greedy-only: a sampled lane in the
+      batch would silently flip its greedy chunk-mates from the fused
+      online-softmax kernel to the dense selection path, whose last-ULP
+      confidence differences could break isolated-decode exactness.
+    """
+    if req.params is None or req.params.is_engine_default:
+        return
+    if STRATEGIES[serve.sampler].finalize != "threshold":
+        raise ValueError(
+            "per-request SamplingParams require a threshold-finalize "
+            f"sampler; {serve.sampler!r} uses "
+            f"{STRATEGIES[serve.sampler].finalize!r} (set the knobs "
+            "globally in ServeConfig instead)")
+    if serve.fused_select and (req.params.temperature or 0) > 0:
+        raise ValueError(
+            "fused_select engines serve greedy requests only "
+            "(per-request temperature > 0 would mix fused and dense "
+            "selection paths within one batch); disable fused_select to "
+            "serve sampled requests")
+
+
+def _lane_key(rp: ResolvedSamplingParams) -> np.ndarray:
+    """A request's RNG stream root: ``PRNGKey(seed)`` — scheduler- and
+    batch-invariant, so isolated and batched decodes draw identically."""
+    return np.asarray(jax.random.PRNGKey(rp.seed), np.uint32)
+
+
+def _finish_reason(gen: np.ndarray, glen_raw: int,
+                   rp: ResolvedSamplingParams) -> str:
+    """"stop" when the request's EOS token landed within its budget."""
+    if not np.any(gen == rp.eos_token_id):
+        return "length"
+    if rp.max_tokens is not None and glen_raw > rp.max_tokens:
+        return "length"
+    return "stop"
+
+
+class _RequestStepper:
+    """Shared request-level surface of both engines: id/param validation at
+    enqueue time, and the ``stream()``/``generate()`` drains over the
+    engine-specific ``step()``."""
+
+    def _register(self, request: GenerationRequest, taken) -> None:
+        """Validate and id-assign one request at ``add_request`` time (so a
+        bad request fails its own submission, not the shared decode step)."""
+        _validate_params(request, self.serve)
+        self._next_id = normalize_requests([request], self._next_id,
+                                           taken=taken)
+        if len(np.asarray(request.prompt)) != self.spec.prompt_len:
+            raise ValueError(
+                f"prompt length {len(np.asarray(request.prompt))} != engine "
+                f"prompt_len {self.spec.prompt_len}")
+
+    def stream(self, requests: Sequence[GenerationRequest], key=None):
+        """Drain ``requests`` through the stepper, yielding a
+        :class:`BlockEvent` the moment each block commits."""
+        if not requests:
+            return
+        if self.has_unfinished():
+            raise RuntimeError("engine busy: drain or abort in-flight "
+                               "requests before a fresh stream()/generate()")
+        _validate_requests(requests)
+        self._reset(key)
+        ids = [self.add_request(r) for r in requests]
+        try:
+            while self.has_unfinished():
+                yield from self.step()
+        finally:
+            # early exit (break / generator GC): drop this call's
+            # leftovers so the engine isn't wedged "busy" forever
+            # (abort of already-completed ids is a no-op)
+            if self.has_unfinished():
+                for rid in ids:
+                    self.abort(rid)
+
+    def generate(self, requests: Sequence[GenerationRequest],
+                 key=None) -> List[GenerationOutput]:
+        """Thin drain-the-stepper wrapper returning the final outputs in
+        completion order; bit-identical to the historical batch API."""
+        return [ev.output for ev in self.stream(requests, key=key)
+                if ev.finished]
+
+
+class _Flight:
+    """Host-side record of one in-flight request (continuous engine).
+    ``arrival`` is the request's effective arrival offset: its trace
+    ``arrival_s`` or, in incremental use, when ``add_request`` was called
+    — so latency/queueing report arrival → completion, not engine-boot →
+    completion."""
+    __slots__ = ("req", "rp", "admit_t", "arrival", "blocks_done")
+
+    def __init__(self, req: GenerationRequest, rp: ResolvedSamplingParams,
+                 admit_t: float, arrival: float):
+        self.req = req
+        self.rp = rp
+        self.admit_t = admit_t
+        self.arrival = arrival
+        self.blocks_done = 0
+
+
+class Engine(_RequestStepper):
+    """Static fixed-shape batching over any sampler strategy.
+
+    The incremental API steps at *batch* granularity: ``step()`` pops up
+    to ``max_batch`` queued requests, runs the jitted sampler to
+    completion, and emits every block event of the batch at once.
+    ``generate()`` drains the stepper and is bit-identical to the
+    historical batch-synchronous behavior.
+    """
 
     def __init__(self, params, cfg: ModelConfig, serve: ServeConfig,
                  prompt_len: int, *, pos_offset: int = 0,
@@ -119,6 +258,7 @@ class Engine:
             cache_refresh_interval=serve.cache_refresh_interval,
             pos_offset=pos_offset, cache_layout=serve.cache_layout,
             fused_select=serve.fused_select)
+        self._use_long_window = use_long_window
         sampler = SAMPLERS[serve.sampler]
         kwargs = {}
         if serve.sampler == "cdlm" and use_long_window:
@@ -129,50 +269,168 @@ class Engine:
                            extras=extras, **kwargs)
 
         self._run = jax.jit(run)
+        self._lanes_jit: Dict[bool, Any] = {}
         self._warm = False
+        self._next_id = 0
+        self._reset()
 
-    def warmup(self, extras=None):
+    # -- incremental core ---------------------------------------------------
+    def _reset(self, key=None) -> None:
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._queue: List[GenerationRequest] = []
+
+    def add_request(self, request: GenerationRequest) -> int:
+        """Enqueue one request; returns its (possibly engine-assigned) id."""
+        self._register(request, {r.id for r in self._queue})
+        self._queue.append(request)
+        return request.id
+
+    def has_unfinished(self) -> bool:
+        return bool(self._queue)
+
+    def abort(self, request_id: int) -> bool:
+        """Drop a queued request (static batches run synchronously, so
+        nothing is ever mid-flight between ``step()`` calls)."""
+        for i, r in enumerate(self._queue):
+            if r.id == request_id:
+                del self._queue[i]
+                return True
+        return False
+
+    def warmup(self, extras=None, *, per_request: bool = False):
+        """Compile the scalar decode path; ``per_request=True`` (servers)
+        also precompiles the per-lane-params variants so the first request
+        carrying explicit :class:`SamplingParams` doesn't stall the
+        serving loop on a jit compile."""
         b = self.serve.max_batch
         prompts = jnp.zeros((b, self.spec.prompt_len), jnp.int32)
         self._run(self.params, prompts, jax.random.PRNGKey(0),
                   extras or {}).tokens.block_until_ready()
+        if (per_request
+                and STRATEGIES[self.serve.sampler].finalize == "threshold"):
+            lanes = LaneParams(
+                temperature=jnp.zeros((b,), jnp.float32),
+                conf_threshold=jnp.full((b,), self.serve.conf_threshold,
+                                        jnp.float32),
+                eos_id=jnp.full((b,), self.cfg.eos_token_id, jnp.int32),
+                key=jnp.zeros((b, 2), jnp.uint32))
+            self._lanes_runner(False)(
+                self.params, prompts, lanes, extras or {}
+            ).tokens.block_until_ready()
+            if not self.serve.fused_select:  # sampled+fused is rejected
+                self._lanes_runner(True)(
+                    self.params, prompts, lanes, extras or {}
+                ).tokens.block_until_ready()
         self._warm = True
 
-    def generate(self, requests: Sequence[Request],
-                 key=None) -> List[Response]:
-        if not requests:
+    def _lanes_runner(self, sampled: bool):
+        """Jitted per-lane-params variant of the sampler (two
+        specializations: all-greedy lanes, and lanes that draw)."""
+        if sampled not in self._lanes_jit:
+            # only reachable for threshold-finalize samplers:
+            # _validate_params rejects per-request params on others at
+            # add_request time
+            strategy = STRATEGIES[self.serve.sampler]
+
+            def run(params, prompts, lanes, extras):
+                return run_block_loop(
+                    params, prompts, cfg=self.cfg, spec=self.spec,
+                    strategy=strategy, extras=extras,
+                    use_long_window=self._use_long_window,
+                    lane_params=lanes, lane_sampled=sampled)
+
+            self._lanes_jit[sampled] = jax.jit(run)
+        return self._lanes_jit[sampled]
+
+    def _n_emit_blocks(self, gen: np.ndarray,
+                       rp: ResolvedSamplingParams) -> int:
+        """Blocks to stream: through the first block containing the
+        request's EOS (later blocks were early-stopped to [MASK] or are
+        post-EOS filler), else up to the request's ``max_tokens`` cap
+        (rounded up to a block), else the whole grid."""
+        B = self.spec.block_size
+        cap = self.spec.n_blocks
+        if rp.max_tokens is not None:
+            cap = max(1, min(cap, -(-rp.max_tokens // B)))
+        hits = np.flatnonzero(gen == rp.eos_token_id)
+        if hits.size:
+            return min(int(hits[0]) // B + 1, cap)
+        return cap
+
+    def step(self) -> List[BlockEvent]:
+        """Run one batch of up to ``max_batch`` queued requests to
+        completion; returns every block event of the batch (final events
+        carry the :class:`GenerationOutput`)."""
+        if not self._queue:
             return []
-        _validate_requests(requests)
-        key = key if key is not None else jax.random.PRNGKey(0)
-        out: List[Response] = []
-        B = self.serve.max_batch
-        for i in range(0, len(requests), B):
-            chunk = list(requests[i:i + B])
-            pad = B - len(chunk)
-            prompts = np.stack([r.prompt for r in chunk] +
-                               [chunk[-1].prompt] * pad)
-            extras = {}
-            if chunk[0].extras:
-                for k in chunk[0].extras:
-                    arrs = [r.extras[k] for r in chunk] + [chunk[-1].extras[k]] * pad
-                    extras[k] = jnp.asarray(np.stack(arrs))
-            key, sub = jax.random.split(key)
-            t0 = time.perf_counter()
+        Bmax = self.serve.max_batch
+        chunk = self._queue[:Bmax]
+        _validate_requests(chunk)  # before consuming: a mismatched-extras
+        del self._queue[:Bmax]     # chunk must not silently vanish
+        rps = [_resolve(r, self.serve, self.cfg) for r in chunk]
+        pad = Bmax - len(chunk)
+        prompts = np.stack([np.asarray(r.prompt) for r in chunk]
+                           + [np.asarray(chunk[-1].prompt)] * pad)
+        extras = {}
+        if chunk[0].extras:
+            for k in chunk[0].extras:
+                arrs = ([r.extras[k] for r in chunk]
+                        + [chunk[-1].extras[k]] * pad)
+                extras[k] = jnp.asarray(np.stack(arrs))
+        self._key, sub = jax.random.split(self._key)
+        # a chunk is one jit call, so any request with explicit params
+        # moves the WHOLE chunk to the per-lane path. At temperature 0 the
+        # two paths select identically; on a sampled-default engine
+        # (ServeConfig.temperature > 0) this swaps bare chunk-mates from
+        # the historical shared batch RNG stream to their own per-request
+        # streams (PRNGKey(seed or id)) — batch-composition-independent,
+        # but different draws than an all-bare chunk.
+        use_lanes = any(r.params is not None
+                        and not r.params.is_engine_default for r in chunk)
+        t0 = time.perf_counter()
+        if use_lanes:
+            prps = rps + [rps[-1]] * pad
+            lanes = LaneParams(
+                temperature=jnp.asarray([p.temperature for p in prps],
+                                        jnp.float32),
+                conf_threshold=jnp.asarray([p.conf_threshold for p in prps],
+                                           jnp.float32),
+                eos_id=jnp.asarray([p.eos_token_id for p in prps],
+                                   jnp.int32),
+                key=jnp.asarray(np.stack([_lane_key(p) for p in prps])))
+            sampled = any(p.temperature > 0 for p in prps)
+            res = self._lanes_runner(sampled)(
+                self.params, jnp.asarray(prompts), lanes, extras)
+        else:
             res = self._run(self.params, jnp.asarray(prompts), sub, extras)
-            res.tokens.block_until_ready()
-            dt = (time.perf_counter() - t0) / len(chunk)
-            toks = np.asarray(res.tokens)
-            steps = np.asarray(res.steps)
-            glens = np.asarray(res.gen_lengths)
-            for j, r in enumerate(chunk):
-                glen = int(glens[j])
-                if r.max_tokens is not None:
-                    glen = min(glen, r.max_tokens)
-                out.append(Response(
-                    id=r.id, tokens=toks[j, self.spec.prompt_len:],
-                    gen_length=glen, steps=int(steps[j]),
-                    latency_s=dt))
-        return out
+        res.tokens.block_until_ready()
+        dt = (time.perf_counter() - t0) / len(chunk)
+        toks = np.asarray(res.tokens)
+        steps = np.asarray(res.steps)
+        glens = np.asarray(res.gen_lengths)
+        P, B = self.spec.prompt_len, self.spec.block_size
+        events: List[BlockEvent] = []
+        for j, (r, rp) in enumerate(zip(chunk, rps)):
+            gen = toks[j, P:]
+            glen_raw = int(glens[j])
+            # reason is judged on the untrimmed span (same rule as the
+            # continuous engine: EOS landing exactly on the cap is "stop")
+            reason = _finish_reason(gen, glen_raw, rp)
+            glen = glen_raw
+            if rp.max_tokens is not None:
+                glen = min(glen, rp.max_tokens)
+                gen = gen[:rp.max_tokens]
+            out = GenerationOutput(
+                id=r.id, tokens=gen, gen_length=glen, steps=int(steps[j]),
+                latency_s=dt, finish_reason=reason)
+            n_blocks = self._n_emit_blocks(gen, rp)
+            for blk in range(n_blocks):
+                events.append(BlockEvent(
+                    request_id=r.id, index=blk, start=blk * B,
+                    tokens=toks[j, P + blk * B:P + (blk + 1) * B].copy(),
+                    finished=(blk == n_blocks - 1),
+                    output=out if blk == n_blocks - 1 else None))
+        return events
 
 
 # ---------------------------------------------------------------------------
@@ -186,19 +444,30 @@ class _SlotState(NamedTuple):
     live: jnp.ndarray         # (N,) bool — lane occupied and unfinished
     steps: jnp.ndarray        # (N,) int32 refinement iterations
     calls: jnp.ndarray        # () int32 total forward passes
-    key: jnp.ndarray
+    temps: jnp.ndarray        # (N,) float32 per-lane temperature
+    taus: jnp.ndarray         # (N,) float32 per-lane conf threshold
+    eos: jnp.ndarray          # (N,) int32 per-lane EOS token
+    keys: jnp.ndarray         # (N, 2) uint32 per-lane PRNG keys
 
 
-class ContinuousEngine:
+class ContinuousEngine(_RequestStepper):
     """Slot-based continuous batching over the CDLM exact-cache strategy.
 
     Scheduling happens at block boundaries: each jitted ``_decode_block``
     call advances every live lane by one block (threshold refinement +
     commit pass); between calls the host evicts finished lanes and admits
-    arrived requests into the freed slots. Only the ``cdlm`` strategy is
+    arrived requests into the freed slots — that boundary is exactly one
+    ``step()`` of the incremental API, and the blocks finalized by it are
+    the returned :class:`BlockEvent` stream. Only the ``cdlm`` strategy is
     supported — approximate-cache strategies refresh KV from the *whole*
     canvas, which couples lanes to batch-global state, and only the exact
     block-causal cache makes per-lane recycling loss-free.
+
+    Per-request sampling: each lane carries its own temperature, τ, EOS
+    and PRNG key (``_SlotState.temps/taus/eos/keys``). Greedy and sampled
+    lanes mix freely; a sampled lane's key advances only on its own active
+    refinement iterations, so its draws are independent of batch
+    composition and bit-identical to its isolated decode.
     """
 
     def __init__(self, params, cfg: ModelConfig, serve: ServeConfig,
@@ -214,14 +483,6 @@ class ContinuousEngine:
             raise ValueError("ContinuousEngine does not support "
                              "encoder-decoder models yet (per-lane encoder "
                              "state is not scheduled)")
-        if serve.temperature > 0:
-            # all lanes share one RNG split per joint refinement iteration,
-            # so sampled decoding would depend on which requests happen to
-            # share the batch — breaking the isolation-exactness guarantee.
-            # Per-lane RNG streams are needed before this can be allowed.
-            raise ValueError("ContinuousEngine currently supports greedy "
-                             "decoding only (temperature=0); got "
-                             f"temperature={serve.temperature}")
         if serve.cache_layout not in C.CACHE_LAYOUTS:
             raise ValueError(f"unknown cache layout {serve.cache_layout!r} "
                              f"(expected one of {C.CACHE_LAYOUTS})")
@@ -230,6 +491,12 @@ class ContinuousEngine:
             raise ValueError("page_pool_pages requires cache_layout='paged' "
                              "— the dense layout preallocates per-lane "
                              "buffers and would silently ignore the budget")
+        if serve.fused_select and serve.temperature > 0:
+            raise ValueError(
+                "fused_select is greedy-only: a sampled default "
+                "(temperature > 0) would route every step through the "
+                "dense selection path, mixing fused and dense decodes "
+                "across batch compositions")
         self.params = params
         self.cfg = cfg
         self.serve = serve
@@ -240,7 +507,8 @@ class ContinuousEngine:
             cache_layout=serve.cache_layout, fused_select=serve.fused_select)
         # fused unembed+select decode: lane forwards skip the lm_head and
         # candidates/confidences come from the vocab-tiled selection kernel
-        # — no (b, B, V) logits in the refinement loop
+        # — no (b, B, V) logits in the refinement loop. Engages only on
+        # all-greedy steps; a step with any sampled lane needs logits.
         self._fused = serve.fused_select
         self.n_lanes = serve.max_batch
         self.paged = serve.cache_layout == C.PAGED
@@ -270,19 +538,19 @@ class ContinuousEngine:
             from repro.kernels.decode_attn import paged_decode_attention
             self._paged_attention_fn = paged_decode_attention
         self._jit_admit = jax.jit(self._admit)
-        self._jit_decode_block = jax.jit(self._decode_block)
+        self._jit_decode_block = jax.jit(self._decode_block,
+                                         static_argnames=("sampled",))
         self._jit_evict = jax.jit(self._evict)
         self._jit_alloc_block = jax.jit(self._alloc_block)
         self._jit_gen_lengths = jax.jit(
-            lambda tokens: _gen_lengths(tokens, self.spec, self.cfg))
+            lambda tokens, eos: _gen_lengths(tokens, self.spec, self.cfg,
+                                             eos_id=eos))
         self._warm = False
-        self._pool_samples: List[int] = []
-        self._live_samples: List[int] = []
-        self._preemptions = 0
-        self._stall_rounds = 0
+        self._next_id = 0
+        self._reset()
 
     # -- jitted state transitions -------------------------------------------
-    def _init_state(self, key) -> _SlotState:
+    def _init_state(self) -> _SlotState:
         N = self.n_lanes
         T = self.spec.prompt_len + self.spec.gen_len
         if self.paged:
@@ -300,12 +568,17 @@ class ContinuousEngine:
             live=jnp.zeros((N,), bool),
             steps=jnp.zeros((N,), jnp.int32),
             calls=jnp.zeros((), jnp.int32),
-            key=key)
+            temps=jnp.zeros((N,), jnp.float32),
+            taus=jnp.full((N,), self.spec.conf_threshold, jnp.float32),
+            eos=jnp.full((N,), self.cfg.eos_token_id, jnp.int32),
+            keys=jnp.zeros((N, 2), jnp.uint32))
 
-    def _admit(self, params, state: _SlotState, prompts, admit, nblocks):
-        """Admit requests into freed lanes: write canvases, reset cache rows
-        (paged: allocate prompt + first-block pages), prefill prompts under
-        the block-causal mask, commit into those rows.
+    def _admit(self, params, state: _SlotState, prompts, admit, nblocks,
+               temps, taus, eos, keys):
+        """Admit requests into freed lanes: write canvases and per-lane
+        sampling params, reset cache rows (paged: allocate prompt +
+        first-block pages), prefill prompts under the block-causal mask,
+        commit into those rows.
 
         Returns ``(state, ok)`` — ``ok`` is the admitted-lane mask that got
         its pages (always the admit mask itself for the dense layout; the
@@ -330,7 +603,11 @@ class ContinuousEngine:
             lane_nblocks=jnp.where(admit, nblocks, state.lane_nblocks),
             live=state.live | admit,
             steps=jnp.where(admit, 0, state.steps),
-            calls=state.calls + 1), ok
+            calls=state.calls + 1,
+            temps=jnp.where(admit, temps, state.temps),
+            taus=jnp.where(admit, taus, state.taus),
+            eos=jnp.where(admit, eos, state.eos),
+            keys=jnp.where(admit[:, None], keys, state.keys)), ok
 
     def _evict(self, state: _SlotState, rows) -> _SlotState:
         """Release lanes: mark dead and reset their cache (paged: return
@@ -348,15 +625,22 @@ class ContinuousEngine:
         cache, ok = C.alloc(state.cache, state.live, starts, starts + B)
         return state._replace(cache=cache), ok
 
-    def _decode_block(self, params, state: _SlotState, run) -> _SlotState:
+    def _decode_block(self, params, state: _SlotState, run, *,
+                      sampled: bool) -> _SlotState:
         """Advance lanes selected by ``run`` by one block: threshold
         refinement to completion, then the exact commit pass into each
         lane's cache rows. Live lanes outside ``run`` (page-stalled) are
-        left untouched and retry at the next boundary."""
+        left untouched and retry at the next boundary.
+
+        ``sampled`` (static) is True when any lane in the batch draws
+        categorically: the refinement forwards then carry logits and
+        per-lane keys advance for active lanes. All-greedy steps keep the
+        (optionally fused, lm_head-free) greedy path bit-for-bit."""
         spec, cfg = self.spec, self.cfg
         P, B = spec.prompt_len, spec.block_size
         live = state.live & run
         starts = P + jnp.clip(state.blk, 0, spec.n_blocks - 1) * B
+        fused = self._fused and not sampled
 
         def slice_blocks(tokens):
             return jax.vmap(
@@ -371,38 +655,42 @@ class ContinuousEngine:
         all_block = jnp.ones((1, B), bool)
 
         def cond(st):
-            tokens, steps, calls, key, it = st
+            tokens, steps, calls, keys, it = st
             bt = slice_blocks(tokens)
             act = jnp.any(bt == cfg.mask_token_id, axis=-1) & live
             return jnp.any(act) & (it < B)
 
         def body(st):
-            tokens, steps, calls, key, it = st
-            key, sub = jax.random.split(key)
+            tokens, steps, calls, keys, it = st
+            bt = slice_blocks(tokens)
+            active = jnp.any(bt == cfg.mask_token_id, axis=-1) & live
+            if sampled:
+                keys, subs = D.split_lane_keys(keys, active)
             net, _ = lane_block_forward(
                 params, tokens, starts, state.cache, cfg=cfg, spec=spec,
                 use_long_window=self._use_long_window,
                 paged_attention_fn=self._paged_attention_fn,
-                return_hidden=self._fused)
-            bt = slice_blocks(tokens)
-            if self._fused:
+                return_hidden=fused)
+            if fused:
                 cand, conf = D.confidence_and_candidates_fused(
                     net, unembed_matrix(params, cfg), bt, cfg.mask_token_id,
-                    spec.temperature, sub, softcap=cfg.final_logit_softcap)
+                    0.0, None, softcap=cfg.final_logit_softcap)
+            elif sampled:
+                cand, conf = D.confidence_and_candidates_per_lane(
+                    net, bt, cfg.mask_token_id, state.temps, subs)
             else:
                 cand, conf = D.confidence_and_candidates(
-                    net, bt, cfg.mask_token_id, spec.temperature, sub)
+                    net, bt, cfg.mask_token_id, 0.0, None)
             sel = D.select_threshold_in_block(conf, all_block,
-                                              spec.conf_threshold)
-            active = jnp.any(bt == cfg.mask_token_id, axis=-1) & live
+                                              state.taus[:, None])
             sel = sel & active[:, None]
             bt = jnp.where(sel, cand.astype(bt.dtype), bt)
             return (scatter_blocks(tokens, bt),
-                    steps + active.astype(jnp.int32), calls + 1, key, it + 1)
+                    steps + active.astype(jnp.int32), calls + 1, keys, it + 1)
 
-        tokens, steps, calls, key, _ = jax.lax.while_loop(
+        tokens, steps, calls, keys, _ = jax.lax.while_loop(
             cond, body,
-            (state.tokens, state.steps, state.calls, state.key,
+            (state.tokens, state.steps, state.calls, state.keys,
              jnp.zeros((), jnp.int32)))
 
         # commit pass: recompute the finalized blocks' KV exactly, only for
@@ -416,177 +704,289 @@ class ContinuousEngine:
         calls = calls + 1
 
         bt = slice_blocks(tokens)
-        eos_hit = jnp.any(bt == cfg.eos_token_id, axis=-1)
+        eos_hit = jnp.any(bt == state.eos[:, None], axis=-1)
         blk = jnp.where(live, state.blk + 1, state.blk)
         finished = live & (eos_hit | (blk >= state.lane_nblocks))
         return state._replace(tokens=tokens, cache=cache, blk=blk,
                               live=state.live & ~finished, steps=steps,
-                              calls=calls, key=key)
+                              calls=calls, keys=keys)
 
     # -- host-side scheduler -------------------------------------------------
-    def warmup(self):
-        state = self._init_state(jax.random.PRNGKey(0))
+    def _reset(self, key=None) -> None:
+        del key  # per-request RNG streams derive from SamplingParams.seed
+        self._state = self._init_state()
+        self._queue: List[GenerationRequest] = []
+        self._flights: List[Optional[_Flight]] = [None] * self.n_lanes
+        self._resolved: Dict[int, ResolvedSamplingParams] = {}
+        # effective arrival offset per request id (trace arrival_s, or the
+        # add_request() wall-clock offset in incremental/server use)
+        self._arrival: Dict[int, float] = {}
+        # blocks already streamed per request id: a preempted request
+        # re-decodes from scratch (bit-identically), but its re-decoded
+        # blocks must not be re-emitted to stream consumers
+        self._emitted: Dict[int, int] = {}
+        self._t0 = time.perf_counter()
+        self._pool_samples: List[int] = []
+        self._live_samples: List[int] = []
+        self._preemptions = 0
+        self._stall_rounds = 0
+
+    def warmup(self, extras=None, *, per_request: bool = False):
+        """Compile the admit/decode/evict paths; ``per_request=True``
+        (servers) also precompiles the sampled decode variant — see
+        :meth:`Engine.warmup`."""
+        if extras:
+            raise ValueError("ContinuousEngine does not support request "
+                             "extras (encoder/prefix embeds) yet")
+        state = self._init_state()
         N, P = self.n_lanes, self.spec.prompt_len
-        state, _ = self._jit_admit(self.params, state,
-                                   jnp.zeros((N, P), jnp.int32),
-                                   jnp.ones((N,), bool),
-                                   jnp.full((N,), self.spec.n_blocks,
-                                            jnp.int32))
+        state, _ = self._jit_admit(
+            self.params, state, jnp.zeros((N, P), jnp.int32),
+            jnp.ones((N,), bool),
+            jnp.full((N,), self.spec.n_blocks, jnp.int32),
+            state.temps, state.taus, state.eos, state.keys)
         run = jnp.ones((N,), bool)
         if self.paged:
             state, ok = self._jit_alloc_block(state)
             run = state.live & ok
             state = self._jit_evict(state, jnp.zeros((N,), bool))
-        state = self._jit_decode_block(self.params, state, run)
-        self._jit_gen_lengths(state.tokens).block_until_ready()
+        state = self._jit_decode_block(self.params, state, run,
+                                       sampled=False)
+        if (self.serve.temperature > 0
+                or (per_request and not self._fused)):
+            # precompile the sampled decode variant: the engine default
+            # makes every lane sampled, or (servers) any request may carry
+            # temperature > 0 and compiling lazily would stall the serving
+            # loop on the first sampled request
+            self._jit_decode_block(self.params, state, run, sampled=True)
+        self._jit_gen_lengths(state.tokens, state.eos).block_until_ready()
         self._warm = True
 
-    def _lane_nblocks(self, req: Request) -> int:
+    def _lane_nblocks(self, rp: ResolvedSamplingParams) -> int:
         B = self.spec.block_size
-        if req.max_tokens is None:
+        if rp.max_tokens is None:
             return self.spec.n_blocks
-        return max(1, min(self.spec.n_blocks, -(-req.max_tokens // B)))
+        return max(1, min(self.spec.n_blocks, -(-rp.max_tokens // B)))
 
-    def generate(self, requests: Sequence[Request],
-                 key=None) -> List[Response]:
-        """Serve ``requests`` (honoring ``arrival_s`` offsets) and return
-        responses in completion order."""
-        if not requests:
-            return []
-        _validate_requests(requests)
-        if requests[0].extras:
+    # -- incremental core ---------------------------------------------------
+    def add_request(self, request: GenerationRequest) -> int:
+        """Enqueue one request (admitted at the next block boundary with a
+        free lane / enough free pages); returns its unique id."""
+        if request.extras:
             raise ValueError("ContinuousEngine does not support request "
                              "extras (encoder/prefix embeds) yet")
-        key = key if key is not None else jax.random.PRNGKey(0)
+        self._register(request,
+                       {r.id for r in self._queue}
+                       | {f.req.id for f in self._flights if f is not None})
+        self._resolved[request.id] = _resolve(request, self.serve, self.cfg)
+        self._arrival[request.id] = max(request.arrival_s,
+                                        time.perf_counter() - self._t0)
+        # stable arrival-order insertion (insort keeps FIFO among equal
+        # arrival_s); requeued preemption victims sit at the front by
+        # construction (direct insert(0) in step())
+        bisect.insort(self._queue, request, key=lambda r: r.arrival_s)
+        return request.id
+
+    def has_unfinished(self) -> bool:
+        return bool(self._queue) or any(f is not None for f in self._flights)
+
+    def abort(self, request_id: int) -> bool:
+        """Drop a queued or in-flight request. An in-flight lane is evicted
+        at once — its cache rows reset and (paged) its pages returned to
+        the pool — without touching any other lane."""
+        for i, r in enumerate(self._queue):
+            if r.id == request_id:
+                del self._queue[i]
+                self._resolved.pop(request_id, None)
+                self._emitted.pop(request_id, None)
+                self._arrival.pop(request_id, None)
+                return True
+        for lane, fl in enumerate(self._flights):
+            if fl is not None and fl.req.id == request_id:
+                row = np.zeros((self.n_lanes,), bool)
+                row[lane] = True
+                self._state = self._jit_evict(self._state, jnp.asarray(row))
+                self._flights[lane] = None
+                self._resolved.pop(request_id, None)
+                self._emitted.pop(request_id, None)
+                self._arrival.pop(request_id, None)
+                return True
+        return False
+
+    def _sampled_step(self) -> bool:
+        return any(f is not None and f.rp.temperature > 0
+                   for f in self._flights)
+
+    def step(self) -> List[BlockEvent]:
+        """Advance one block boundary: admit arrived requests into free
+        lanes, (paged) back every live lane's next block with pages, run
+        one block-level decode for the runnable lanes, evict finished
+        lanes. Returns one :class:`BlockEvent` per block finalized this
+        step (final blocks carry the request's :class:`GenerationOutput`).
+        """
         N, P, B = self.n_lanes, self.spec.prompt_len, self.spec.block_size
-        queue = deque(sorted(requests, key=lambda r: r.arrival_s))
-        state = self._init_state(key)
-        lane_req: List[Optional[Request]] = [None] * N
-        lane_admit_t = np.zeros((N,), np.float64)
-        out: List[Response] = []
-        self._pool_samples = []
-        self._live_samples = []
-        self._preemptions = 0
-        self._stall_rounds = 0
-        t0 = time.perf_counter()
+        state = self._state
+        now = time.perf_counter() - self._t0
 
-        while queue or any(r is not None for r in lane_req):
-            now = time.perf_counter() - t0
-            # ---- admission at the block boundary ----
-            # paged: budgeted by free *pages* for prompt + next block, not by
-            # whole-sequence reservation — a request enters as soon as its
-            # next block can be backed
-            free = [i for i in range(N) if lane_req[i] is None]
-            free_pg = (int(np.asarray(C.free_page_count(state.cache)))
-                       if self.paged and free and queue else 0)
-            admit = np.zeros((N,), bool)
-            prompts = np.zeros((N, P), np.int32)
-            nblocks = np.zeros((N,), np.int32)
-            for lane in free:
-                if not queue or queue[0].arrival_s > now:
-                    break
-                if self.paged and free_pg < self._admit_pages:
-                    break
-                req = queue.popleft()
-                lane_req[lane] = req
-                lane_admit_t[lane] = now
-                admit[lane] = True
-                prompts[lane] = req.prompt
-                nblocks[lane] = self._lane_nblocks(req)
-                if self.paged:
-                    free_pg -= self._admit_pages
-            if admit.any():
-                state, aok = self._jit_admit(self.params, state,
-                                             jnp.asarray(prompts),
-                                             jnp.asarray(admit),
-                                             jnp.asarray(nblocks))
-                if self.paged:
-                    aok = np.asarray(aok)
-                    assert bool(aok[admit].all()), \
-                        "page accounting bug: admitted within budget but " \
-                        "allocation failed"
-            if not any(r is not None for r in lane_req):
-                # nothing decoding and nothing arrived yet: idle to the next
-                # arrival instead of spinning
-                if queue:
-                    wait = queue[0].arrival_s - (time.perf_counter() - t0)
-                    if wait > 0:
-                        time.sleep(wait)
-                continue
-
-            # ---- paged: back every live lane's current block with pages ----
-            live = np.asarray(state.live)
+        # ---- admission at the block boundary ----
+        # paged: budgeted by free *pages* for prompt + next block, not by
+        # whole-sequence reservation — a request enters as soon as its
+        # next block can be backed
+        free = [i for i in range(N) if self._flights[i] is None]
+        free_pg = (int(np.asarray(C.free_page_count(state.cache)))
+                   if self.paged and free and self._queue else 0)
+        admit = np.zeros((N,), bool)
+        prompts = np.zeros((N, P), np.int32)
+        nblocks = np.zeros((N,), np.int32)
+        temps = np.zeros((N,), np.float32)
+        taus = np.zeros((N,), np.float32)
+        eos = np.zeros((N,), np.int32)
+        keys = np.zeros((N, 2), np.uint32)
+        for lane in free:
+            if not self._queue or self._queue[0].arrival_s > now:
+                break
+            if self.paged and free_pg < self._admit_pages:
+                break
+            req = self._queue.pop(0)
+            rp = self._resolved[req.id]
+            self._flights[lane] = _Flight(
+                req, rp, admit_t=now,
+                arrival=self._arrival.get(req.id, req.arrival_s))
+            admit[lane] = True
+            prompts[lane] = np.asarray(req.prompt)
+            nblocks[lane] = self._lane_nblocks(rp)
+            temps[lane] = rp.temperature
+            taus[lane] = rp.conf_threshold
+            eos[lane] = rp.eos_token_id
+            keys[lane] = _lane_key(rp)
             if self.paged:
+                free_pg -= self._admit_pages
+        if admit.any():
+            state, aok = self._jit_admit(
+                self.params, state, jnp.asarray(prompts), jnp.asarray(admit),
+                jnp.asarray(nblocks), jnp.asarray(temps), jnp.asarray(taus),
+                jnp.asarray(eos), jnp.asarray(keys))
+            if self.paged:
+                aok = np.asarray(aok)
+                assert bool(aok[admit].all()), \
+                    "page accounting bug: admitted within budget but " \
+                    "allocation failed"
+        if all(f is None for f in self._flights):
+            # nothing decoding and nothing arrived yet: idle to the next
+            # arrival instead of spinning
+            self._state = state
+            if self._queue:
+                wait = self._queue[0].arrival_s - (time.perf_counter()
+                                                   - self._t0)
+                if wait > 0:
+                    time.sleep(wait)
+            return []
+
+        # ---- paged: back every live lane's current block with pages ----
+        live = np.asarray(state.live)
+        if self.paged:
+            state, ok = self._jit_alloc_block(state)
+            run = live & np.asarray(ok)
+            while live.any() and not run.any():
+                # every live lane is page-starved: preempt the youngest
+                # (its pages go back to the pool, its request re-enters
+                # the queue — the request's own deterministic RNG stream
+                # makes the re-decode loss-free)
+                victims = [i for i in range(N) if live[i]]
+                victim = max(victims,
+                             key=lambda i: (self._flights[i].admit_t, i))
+                if len(victims) == 1:
+                    raise RuntimeError(
+                        "page pool exhausted with a single live lane — "
+                        "pool sizing invariant violated")
+                vrow = np.zeros((N,), bool)
+                vrow[victim] = True
+                state = self._jit_evict(state, jnp.asarray(vrow))
+                self._queue.insert(0, self._flights[victim].req)
+                self._flights[victim] = None
+                self._preemptions += 1
+                live = np.asarray(state.live)
                 state, ok = self._jit_alloc_block(state)
                 run = live & np.asarray(ok)
-                while live.any() and not run.any():
-                    # every live lane is page-starved: preempt the youngest
-                    # (its pages go back to the pool, its request re-enters
-                    # the queue — deterministic greedy decode makes the
-                    # re-decode loss-free)
-                    victims = [i for i in range(N) if live[i]]
-                    victim = max(victims,
-                                 key=lambda i: (lane_admit_t[i], i))
-                    if len(victims) == 1:
-                        raise RuntimeError(
-                            "page pool exhausted with a single live lane — "
-                            "pool sizing invariant violated")
-                    vrow = np.zeros((N,), bool)
-                    vrow[victim] = True
-                    state = self._jit_evict(state, jnp.asarray(vrow))
-                    queue.appendleft(lane_req[victim])
-                    lane_req[victim] = None
-                    self._preemptions += 1
-                    live = np.asarray(state.live)
-                    state, ok = self._jit_alloc_block(state)
-                    run = live & np.asarray(ok)
-                if not live.any():
-                    continue
-                if (live & ~run).any():
-                    self._stall_rounds += 1
-                self._pool_samples.append(
-                    self.n_pages
-                    - int(np.asarray(C.free_page_count(state.cache))))
-            else:
-                run = live
+            if not live.any():
+                self._state = state
+                return []
+            if (live & ~run).any():
+                self._stall_rounds += 1
+            self._pool_samples.append(
+                self.n_pages
+                - int(np.asarray(C.free_page_count(state.cache))))
+        else:
+            run = live
 
-            # ---- one block-level decode step for the runnable lanes ----
-            self._live_samples.append(int(run.sum()))
-            state = self._jit_decode_block(self.params, state,
-                                           jnp.asarray(run))
-            live = np.asarray(state.live)
-            t_done = time.perf_counter() - t0
+        # ---- one block-level decode step for the runnable lanes ----
+        self._live_samples.append(int(run.sum()))
+        state = self._jit_decode_block(self.params, state, jnp.asarray(run),
+                                       sampled=self._sampled_step())
+        live = np.asarray(state.live)
+        t_done = time.perf_counter() - self._t0
 
-            # ---- eviction of finished lanes ----
-            done_lanes = [i for i in range(N)
-                          if lane_req[i] is not None and not live[i]]
-            if done_lanes:
-                toks = np.asarray(state.tokens)
-                steps = np.asarray(state.steps)
-                glens = np.asarray(self._jit_gen_lengths(state.tokens))
-                for lane in done_lanes:
-                    req = lane_req[lane]
-                    gen = toks[lane, P:]
-                    glen = int(glens[lane])
-                    if req.max_tokens is not None:
-                        glen = min(glen, req.max_tokens)
-                    out.append(Response(
-                        id=req.id, tokens=gen, gen_length=glen,
-                        steps=int(steps[lane]),
-                        latency_s=t_done - req.arrival_s,
-                        queue_s=lane_admit_t[lane] - req.arrival_s))
-                    lane_req[lane] = None
-                if self.paged:
-                    # return the finished lanes' pages to the pool *now* so
-                    # the next admission sees them
-                    drow = np.zeros((N,), bool)
-                    drow[done_lanes] = True
-                    state = self._jit_evict(state, jnp.asarray(drow))
-        return out
+        # ---- block events + eviction of finished lanes ----
+        ran = [i for i in range(N)
+               if run[i] and self._flights[i] is not None]
+        events: List[BlockEvent] = []
+        done_lanes = [i for i in ran if not live[i]]
+        toks = steps_arr = glens = None
+        if done_lanes:
+            # full-canvas transfer only when a request completed (the
+            # legacy cadence); in-flight boundaries move one block per
+            # ran lane below
+            toks = np.asarray(state.tokens)
+            steps_arr = np.asarray(state.steps)
+            glens = np.asarray(self._jit_gen_lengths(state.tokens,
+                                                     state.eos))
+        for lane in ran:
+            fl = self._flights[lane]
+            blk = fl.blocks_done
+            fl.blocks_done += 1
+            if live[lane] and blk < self._emitted.get(fl.req.id, 0):
+                continue  # preemption re-decode: block already streamed
+            self._emitted[fl.req.id] = blk + 1
+            lo, hi = P + blk * B, P + (blk + 1) * B
+            block_toks = (toks[lane, lo:hi].copy() if toks is not None
+                          else np.asarray(state.tokens[lane, lo:hi]))
+            ev = BlockEvent(
+                request_id=fl.req.id, index=blk, start=blk * B,
+                tokens=block_toks, finished=not live[lane])
+            if ev.finished:
+                gen = toks[lane, P:].copy()
+                glen_raw = int(glens[lane])
+                # reason judged on the untrimmed span; the returned span
+                # is sliced to the cap (same contract as the static
+                # engine — no [MASK] filler past max_tokens)
+                reason = _finish_reason(gen, glen_raw, fl.rp)
+                glen = glen_raw
+                if fl.rp.max_tokens is not None:
+                    glen = min(glen, fl.rp.max_tokens)
+                    gen = gen[:fl.rp.max_tokens]
+                ev.output = GenerationOutput(
+                    id=fl.req.id, tokens=gen, gen_length=glen,
+                    steps=int(steps_arr[lane]),
+                    latency_s=t_done - fl.arrival,
+                    queue_s=fl.admit_t - fl.arrival,
+                    finish_reason=reason)
+                self._flights[lane] = None
+                self._resolved.pop(fl.req.id, None)
+                self._emitted.pop(fl.req.id, None)
+                self._arrival.pop(fl.req.id, None)
+            events.append(ev)
+        if done_lanes and self.paged:
+            # return the finished lanes' pages to the pool *now* so the
+            # next admission sees them
+            drow = np.zeros((N,), bool)
+            drow[done_lanes] = True
+            state = self._jit_evict(state, jnp.asarray(drow))
+        self._state = state
+        return events
 
     def page_pool_stats(self) -> Dict[str, float]:
-        """Occupancy report for the last :meth:`generate` run (paged layout;
-        zeros for dense). Pages are sampled at every block boundary."""
+        """Occupancy report since the last reset (paged layout; zeros for
+        dense). Pages are sampled at every block boundary."""
         if not self.paged or not self._pool_samples:
             return {"n_pages": float(self.n_pages), "peak_pages": 0.0,
                     "avg_pages": 0.0, "peak_occupancy": 0.0,
@@ -602,8 +1002,8 @@ class ContinuousEngine:
         }
 
     def concurrency_stats(self) -> Dict[str, float]:
-        """Decoding-lane concurrency for the last :meth:`generate` run,
-        sampled at every block-level decode step (both layouts)."""
+        """Decoding-lane concurrency since the last reset, sampled at every
+        block-level decode step (both layouts)."""
         if not self._live_samples:
             return {"peak_lanes": 0.0, "avg_lanes": 0.0}
         return {"peak_lanes": float(max(self._live_samples)),
@@ -624,7 +1024,7 @@ def make_engine(params, cfg: ModelConfig, serve: ServeConfig,
                      "(expected 'static' or 'continuous')")
 
 
-def efficiency_report(responses: Sequence[Response]) -> Dict[str, float]:
+def efficiency_report(responses: Sequence[GenerationOutput]) -> Dict[str, float]:
     """Per-sample averages, the paper's reporting convention (App. A.3)."""
     if not responses:
         return {"latency_s": 0.0, "steps": 0.0, "gen_length": 0.0, "tps": 0.0}

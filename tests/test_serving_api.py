@@ -1,0 +1,385 @@
+"""Request-level serving API: per-request SamplingParams (mixed batches
+bit-identical to isolated decodes, dense and paged layouts), exact
+block-at-a-time streaming (``stream()`` reassembles to ``generate()``),
+mid-flight ``abort()``, engine-assigned ids, and the unified
+``warmup(extras=None)`` surface."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import get_config
+from repro.serving import (
+    ContinuousEngine,
+    Engine,
+    GenerationRequest,
+    Request,
+    SamplingParams,
+    make_engine,
+)
+
+CFG = get_config("qwen2-0.5b").reduced(dtype="float32")
+P, G, B = 8, 16, 4
+
+
+def _serve(scheduler="continuous", max_batch=2, sampler="cdlm", **kw):
+    return ServeConfig(max_batch=max_batch, block_size=B, gen_length=G,
+                       sampler=sampler, conf_threshold=0.5,
+                       scheduler=scheduler, **kw)
+
+
+@pytest.fixture(scope="module")
+def params():
+    from repro.models import init_model
+    return init_model(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(0)
+    return [rng.integers(2, CFG.vocab_size, P, dtype=np.int32)
+            for _ in range(5)]
+
+
+def _mixed_requests(prompts):
+    """Greedy, sampled (explicit + default seed) and per-request-τ lanes
+    sharing one batch."""
+    sp = [SamplingParams(),
+          SamplingParams(temperature=0.9, seed=7),
+          SamplingParams(conf_threshold=0.8),
+          SamplingParams(temperature=0.5),
+          SamplingParams(temperature=0.7, conf_threshold=0.6, seed=3)]
+    return [Request(prompt=p, id=i, params=s)
+            for i, (p, s) in enumerate(zip(prompts, sp))]
+
+
+# ---------------------------------------------------------------------------
+# Mixed per-request params == isolated decode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_continuous_mixed_params_match_isolated(params, prompts, layout):
+    """THE per-request invariant: a continuous batch mixing greedy and
+    sampled lanes (different temperatures, thresholds, seeds) decodes
+    every lane bit-identically to that request served alone — per-lane
+    RNG streams advance only on the lane's own refinement iterations."""
+    eng = ContinuousEngine(params, CFG, _serve(cache_layout=layout),
+                           prompt_len=P)
+    eng.warmup()
+    reqs = _mixed_requests(prompts)
+    batched = {r.id: r for r in eng.generate(list(reqs))}
+    assert sorted(batched) == [0, 1, 2, 3, 4]
+    for req in reqs:
+        solo = eng.generate([Request(prompt=req.prompt, id=req.id,
+                                     params=req.params)])[0]
+        got = batched[req.id]
+        assert np.array_equal(solo.tokens, got.tokens), req.id
+        assert solo.steps == got.steps, req.id
+        assert solo.gen_length == got.gen_length, req.id
+        assert solo.finish_reason == got.finish_reason, req.id
+
+
+def test_static_mixed_params_match_isolated(params, prompts):
+    """The static engine threads the same per-lane (b,) params through
+    the jitted threshold loop."""
+    eng = Engine(params, CFG, _serve("static", max_batch=4), prompt_len=P)
+    reqs = _mixed_requests(prompts)[:4]
+    batched = {r.id: r for r in eng.generate(list(reqs))}
+    for req in reqs:
+        solo = eng.generate([Request(prompt=req.prompt, id=req.id,
+                                     params=req.params)])[0]
+        got = batched[req.id]
+        assert np.array_equal(solo.tokens, got.tokens), req.id
+        assert solo.steps == got.steps, req.id
+
+
+def test_sampled_seed_controls_stream(params, prompts):
+    """Same seed -> same sample; different seed -> (here) different
+    tokens; temperature=0 ignores the seed."""
+    eng = ContinuousEngine(params, CFG, _serve(), prompt_len=P)
+    eng.warmup()
+
+    def run(sp):
+        return eng.generate([Request(prompt=prompts[0], id=0, params=sp)])[0]
+
+    a = run(SamplingParams(temperature=0.9, seed=11))
+    b = run(SamplingParams(temperature=0.9, seed=11))
+    c = run(SamplingParams(temperature=0.9, seed=12))
+    assert np.array_equal(a.tokens, b.tokens)
+    assert not np.array_equal(a.tokens, c.tokens)
+    g1 = run(SamplingParams(seed=11))
+    g2 = run(SamplingParams(seed=12))
+    assert np.array_equal(g1.tokens, g2.tokens)
+
+
+def test_per_request_params_rejected_for_nonthreshold(params, prompts):
+    """Rejected at add_request time, so a server can 400 the one bad
+    request instead of failing the shared decode step."""
+    eng = Engine(params, CFG, _serve("static", max_batch=2, sampler="ar"),
+                 prompt_len=P)
+    req = Request(prompt=prompts[0], id=0,
+                  params=SamplingParams(temperature=0.5))
+    with pytest.raises(ValueError, match="threshold"):
+        eng.add_request(req)
+    with pytest.raises(ValueError, match="threshold"):
+        eng.generate([Request(prompt=prompts[0], id=0,
+                              params=SamplingParams(temperature=0.5))])
+
+
+def test_fused_select_engine_is_greedy_only(params, prompts):
+    """fused_select engines reject sampled requests up front: a sampled
+    lane would silently flip greedy chunk-mates from the fused kernel to
+    the dense selection path (last-ULP confidence differences could break
+    isolated-decode exactness)."""
+    eng = ContinuousEngine(params, CFG, _serve(fused_select=True),
+                           prompt_len=P)
+    with pytest.raises(ValueError, match="greedy"):
+        eng.add_request(Request(prompt=prompts[0],
+                                params=SamplingParams(temperature=0.5)))
+    # greedy per-request knobs (threshold, eos, cap) remain fine — they
+    # never change which selection path runs
+    out = eng.generate([Request(
+        prompt=prompts[0], id=0,
+        params=SamplingParams(conf_threshold=0.8))])[0]
+    solo = ContinuousEngine(params, CFG, _serve(), prompt_len=P).generate(
+        [Request(prompt=prompts[0], id=0,
+                 params=SamplingParams(conf_threshold=0.8))])[0]
+    assert np.array_equal(out.tokens, solo.tokens)
+    with pytest.raises(ValueError, match="greedy-only"):
+        ContinuousEngine(params, CFG,
+                         _serve(fused_select=True, temperature=0.7),
+                         prompt_len=P)
+
+
+# ---------------------------------------------------------------------------
+# Streaming
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheduler", ["static", "continuous"])
+def test_stream_reassembles_to_generate(params, prompts, scheduler):
+    """Concatenating a request's BlockEvents reproduces its generate()
+    span token-for-token; the final event carries the same output."""
+    eng = make_engine(params, CFG, _serve(scheduler), prompt_len=P)
+    eng.warmup()
+    reqs = [Request(prompt=p, id=i) for i, p in enumerate(prompts)]
+    want = {r.id: r for r in eng.generate(list(reqs))}
+
+    got_blocks, got_out = {}, {}
+    for ev in eng.stream([Request(prompt=p, id=i)
+                          for i, p in enumerate(prompts)]):
+        assert ev.tokens.shape == (B,)
+        assert ev.start == ev.index * B
+        blocks = got_blocks.setdefault(ev.request_id, [])
+        assert ev.index == len(blocks)  # in-order, no gaps
+        blocks.append(ev.tokens)
+        if ev.finished:
+            got_out[ev.request_id] = ev.output
+    assert sorted(got_out) == sorted(want)
+    for rid, out in got_out.items():
+        ref = want[rid]
+        assert np.array_equal(out.tokens, ref.tokens)
+        assert out.steps == ref.steps
+        assert out.gen_length == ref.gen_length
+        span = np.concatenate(got_blocks[rid])
+        assert np.array_equal(span, np.asarray(ref.tokens)[:len(span)])
+        assert len(span) >= ref.gen_length
+
+
+def test_stream_no_duplicate_blocks_under_preemption(params, prompts):
+    """A page-starved pool preempts lanes, and preempted requests re-decode
+    from scratch — but their already-streamed blocks must not be re-emitted
+    (the re-decode is bit-identical, so dedup by block index is exact)."""
+    T = P + G
+    eng = ContinuousEngine(
+        params, CFG,
+        _serve(cache_layout="paged", page_pool_pages=T // B + 2),
+        prompt_len=P)
+    eng.warmup()
+    reqs = [Request(prompt=p, id=i) for i, p in enumerate(prompts)]
+    want = {r.id: r for r in eng.generate(list(reqs))}
+    assert eng.page_pool_stats()["preemptions"] \
+        + eng.page_pool_stats()["stall_rounds"] > 0
+
+    seen, blocks, outs = set(), {}, {}
+    for ev in eng.stream([Request(prompt=p, id=i)
+                          for i, p in enumerate(prompts)]):
+        assert (ev.request_id, ev.index) not in seen
+        seen.add((ev.request_id, ev.index))
+        assert ev.index == len(blocks.setdefault(ev.request_id, []))
+        blocks[ev.request_id].append(ev.tokens)
+        if ev.finished:
+            outs[ev.request_id] = ev.output
+    assert sorted(outs) == sorted(want)
+    for rid, out in outs.items():
+        assert np.array_equal(out.tokens, want[rid].tokens), rid
+        span = np.concatenate(blocks[rid])
+        assert np.array_equal(span, np.asarray(out.tokens)[:len(span)])
+
+
+def test_stream_early_exit_does_not_wedge_engine(params, prompts):
+    """Abandoning a stream mid-way (break / generator close) aborts its
+    leftover requests, so the engine isn't stuck 'busy' forever."""
+    eng = ContinuousEngine(params, CFG, _serve(), prompt_len=P)
+    eng.warmup()
+    it = eng.stream([Request(prompt=p, id=i)
+                     for i, p in enumerate(prompts[:3])])
+    next(it)
+    it.close()
+    assert not eng.has_unfinished()
+    out = eng.generate([Request(prompt=prompts[0], id=0)])
+    assert len(out) == 1
+
+
+def test_incremental_add_step_matches_generate(params, prompts):
+    """Driving add_request()/step()/has_unfinished() by hand is the same
+    computation generate() drains."""
+    eng = ContinuousEngine(params, CFG, _serve(), prompt_len=P)
+    eng.warmup()
+    want = {r.id: r for r in eng.generate(
+        [Request(prompt=p, id=i) for i, p in enumerate(prompts)])}
+    eng._reset()
+    for i, p in enumerate(prompts):
+        eng.add_request(Request(prompt=p, id=i))
+    out = {}
+    while eng.has_unfinished():
+        for ev in eng.step():
+            if ev.finished:
+                out[ev.request_id] = ev.output
+    assert sorted(out) == sorted(want)
+    for rid in want:
+        assert np.array_equal(out[rid].tokens, want[rid].tokens)
+
+
+# ---------------------------------------------------------------------------
+# Abort
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_abort_frees_lane_without_perturbing_survivors(params, prompts,
+                                                       layout):
+    """Aborting an in-flight request evicts its lane (paged: returns its
+    pages) and the queued request takes the slot; every surviving request
+    still decodes bit-identically to its isolated decode."""
+    from repro.core import cache as C
+    eng = ContinuousEngine(params, CFG, _serve(cache_layout=layout),
+                           prompt_len=P)
+    eng.warmup()
+    solo = {}
+    for i, p in enumerate(prompts[:3]):
+        solo[i] = eng.generate([Request(prompt=p, id=i)])[0]
+
+    eng._reset()
+    for i, p in enumerate(prompts[:3]):  # 3 requests, 2 lanes
+        eng.add_request(Request(prompt=p, id=i))
+    out = {}
+    first = eng.step()  # requests 0 and 1 advance one block
+    assert {ev.request_id for ev in first} == {0, 1}
+    assert eng.abort(1)          # mid-flight
+    assert not eng.abort(99)     # unknown id
+    while eng.has_unfinished():
+        for ev in eng.step():
+            if ev.finished:
+                out[ev.request_id] = ev.output
+    assert sorted(out) == [0, 2]  # aborted request never completes
+    for rid in out:
+        assert np.array_equal(out[rid].tokens, solo[rid].tokens), rid
+        assert out[rid].steps == solo[rid].steps, rid
+    if layout == "paged":
+        # every page went back to the pool
+        free = int(np.asarray(C.free_page_count(eng._state.cache)))
+        assert free == eng.n_pages
+
+
+def test_abort_queued_request(params, prompts):
+    eng = ContinuousEngine(params, CFG, _serve(), prompt_len=P)
+    eng.warmup()
+    eng._reset()
+    rid = eng.add_request(Request(prompt=prompts[0]))
+    assert eng.abort(rid)
+    assert not eng.has_unfinished()
+
+
+# ---------------------------------------------------------------------------
+# Request ids
+# ---------------------------------------------------------------------------
+def test_engine_assigns_unique_monotonic_ids(params, prompts):
+    eng = ContinuousEngine(params, CFG, _serve(), prompt_len=P)
+    eng.warmup()
+    resp = eng.generate([Request(prompt=p) for p in prompts[:3]])
+    assert sorted(r.id for r in resp) == [0, 1, 2]
+    # later calls keep counting up — ids stay unique per engine
+    resp2 = eng.generate([Request(prompt=prompts[0])])
+    assert resp2[0].id == 3
+
+
+@pytest.mark.parametrize("scheduler", ["static", "continuous"])
+def test_duplicate_explicit_ids_rejected(params, prompts, scheduler):
+    eng = make_engine(params, CFG, _serve(scheduler), prompt_len=P)
+    reqs = [Request(prompt=prompts[0], id=5), Request(prompt=prompts[1], id=5)]
+    with pytest.raises(ValueError, match="duplicate"):
+        list(eng.stream(reqs))
+
+
+def test_auto_ids_skip_explicit_ones(params, prompts):
+    eng = ContinuousEngine(params, CFG, _serve(), prompt_len=P)
+    eng.warmup()
+    resp = eng.generate([Request(prompt=prompts[0], id=0),
+                         Request(prompt=prompts[1])])
+    assert sorted(r.id for r in resp) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Satellites: max_tokens slicing, warmup unification, eos override
+# ---------------------------------------------------------------------------
+def test_static_max_tokens_slices_tokens(params, prompts):
+    """The static engine returns the *trimmed* token span for capped
+    requests (it used to trim only the reported gen_length)."""
+    eng = Engine(params, CFG, _serve("static"), prompt_len=P)
+    capped, full = eng.generate([
+        Request(prompt=prompts[0], id=0, max_tokens=B),
+        Request(prompt=prompts[1], id=1)])
+    assert capped.tokens.shape == (B,)
+    assert capped.gen_length <= B
+    assert full.tokens.shape == (G,)
+    # params.max_tokens spells the same cap
+    via_params = eng.generate([Request(
+        prompt=prompts[0], id=0,
+        params=SamplingParams(max_tokens=B))])[0]
+    assert np.array_equal(via_params.tokens, capped.tokens)
+    # streaming honors the cap too: one block, not the whole grid
+    evs = list(eng.stream([Request(prompt=prompts[0], id=0, max_tokens=B)]))
+    assert [ev.index for ev in evs] == [0]
+    assert evs[-1].finished
+
+
+@pytest.mark.parametrize("scheduler", ["static", "continuous"])
+def test_warmup_signature_unified(params, scheduler):
+    """make_engine callers pass warmup(extras=None) without branching on
+    the engine type."""
+    eng = make_engine(params, CFG, _serve(scheduler), prompt_len=P)
+    eng.warmup(extras=None)
+    assert eng._warm
+    if scheduler == "continuous":
+        with pytest.raises(ValueError, match="extras"):
+            eng.warmup(extras={"encoder_embeds": np.zeros((1, 2))})
+
+
+def test_eos_override_stops_early(params, prompts):
+    eng = ContinuousEngine(params, CFG, _serve(), prompt_len=P)
+    eng.warmup()
+    base = eng.generate([Request(prompt=prompts[0], id=0)])[0]
+    stop_tok = int(np.asarray(base.tokens)[0])  # guaranteed to be emitted
+    resp = eng.generate([Request(
+        prompt=prompts[0], id=0,
+        params=SamplingParams(eos_token_id=stop_tok))])[0]
+    assert resp.finish_reason == "stop"
+    assert resp.gen_length == 0  # stop token is the very first generated one
+    # the decode itself is unchanged up to the stop block
+    assert np.array_equal(np.asarray(resp.tokens)[:B],
+                          np.asarray(base.tokens)[:B])
+
+
+def test_generation_request_alias_and_finish_reason(params, prompts):
+    """GenerationRequest is the canonical spelling; uncapped toy decodes
+    exhaust the canvas -> "length"."""
+    eng = Engine(params, CFG, _serve("static"), prompt_len=P)
+    resp = eng.generate([GenerationRequest(prompt=prompts[0], id=0)])[0]
+    assert resp.finish_reason in ("stop", "length")
+    assert resp.tokens.shape == (G,)

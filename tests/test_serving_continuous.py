@@ -55,15 +55,21 @@ def test_continuous_requires_cdlm(params):
                          prompt_len=P)
 
 
-def test_continuous_rejects_sampled_decoding(params):
-    """Lanes share an RNG stream, so sampled decoding would couple a
-    request's tokens to its batch neighbors — rejected until per-lane RNG
-    lands."""
+def test_continuous_sampled_decoding_is_isolation_exact(params, requests):
+    """Sampled decoding runs on per-lane RNG streams (advanced only on a
+    lane's own active iterations), so a sampled request decodes
+    bit-identically to its isolated decode regardless of batch company."""
     serve = ServeConfig(max_batch=2, block_size=B, gen_length=G,
-                        sampler="cdlm", scheduler="continuous",
-                        temperature=0.7)
-    with pytest.raises(ValueError, match="temperature"):
-        ContinuousEngine(params, CFG, serve, prompt_len=P)
+                        sampler="cdlm", conf_threshold=0.5,
+                        scheduler="continuous", temperature=0.7)
+    eng = ContinuousEngine(params, CFG, serve, prompt_len=P)
+    eng.warmup()
+    batched = {r.id: r for r in eng.generate(list(requests))}
+    for req in requests[:3]:
+        solo = eng.generate([Request(prompt=req.prompt, id=req.id)])[0]
+        got = batched[req.id]
+        assert np.array_equal(solo.tokens, got.tokens), req.id
+        assert solo.steps == got.steps, req.id
 
 
 def test_make_engine_dispatch(params):
@@ -115,8 +121,9 @@ def test_max_tokens_caps_generation(params, requests):
     resp = eng.generate([Request(prompt=requests[0].prompt, id=0,
                                  max_tokens=B)])
     assert resp[0].gen_length <= B
-    # positions past the capped blocks were never decoded
-    assert (resp[0].tokens[B:] == CFG.mask_token_id).all()
+    # the returned span is sliced to the cap (same contract as the
+    # static engine — no [MASK] filler past max_tokens)
+    assert resp[0].tokens.shape == (B,)
 
 
 def test_arrival_trace_ordering(params, requests):
