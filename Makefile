@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-fast bench bench-smoke serve-smoke lint
+.PHONY: verify verify-fast bench bench-smoke bench-gate serve-smoke lint
 
 # tier-1 suite (ROADMAP.md): must stay green
 verify:
@@ -21,6 +21,15 @@ bench:
 bench-smoke:
 	$(PYTHON) -m benchmarks.bench_serving --smoke --json BENCH_serving.json
 	$(PYTHON) -m benchmarks.bench_kernels --smoke --json BENCH_kernels.json
+
+# regression ratchet: run the smoke benches, gate the tracked metrics
+# against the last line of BENCH_trajectory.jsonl (>10% regression fails),
+# and record the run only once the gate passes (CI: bench-trajectory job)
+bench-gate: bench-smoke
+	$(PYTHON) -m benchmarks.trajectory gate \
+		--kernels BENCH_kernels.json --serving BENCH_serving.json
+	$(PYTHON) -m benchmarks.trajectory append \
+		--kernels BENCH_kernels.json --serving BENCH_serving.json
 
 # HTTP serving smoke: boot the stdlib /v1/completions frontend on a tiny
 # random-init engine, run one streamed + one non-streamed completion via

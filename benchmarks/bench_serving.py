@@ -23,8 +23,6 @@ commit, so the pool sustains more concurrent decodes per HBM byte.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import sys
 import time
@@ -138,6 +136,15 @@ def run_schedulers(params, csv_rows=None, results=None, n_requests=96,
             "static_tps": s_tps, "continuous_tps": c_tps,
             "speedup": speedup,
         }
+        shape = {"n_requests": n_requests, "max_batch": max_batch}
+        results.setdefault("records", []).extend([
+            common.record("serving_sched", shape, "tok_per_s", s_tps,
+                          config={"scheduler": "static"}),
+            common.record("serving_sched", shape, "tok_per_s", c_tps,
+                          config={"scheduler": "continuous"}),
+            common.record("serving_sched", shape,
+                          "continuous_static_speedup", speedup),
+        ])
     return speedup
 
 
@@ -215,6 +222,23 @@ def run_layouts(params, csv_rows=None, results=None, n_requests=64,
             "dense_lanes": dense_lanes, "paged_lanes": paged_lanes,
             "concurrency_gain": gain, **rows,
         }
+        shape = {"n_requests": n_requests, "budget_pages": budget_pages,
+                 "dense_lanes": dense_lanes, "paged_lanes": paged_lanes}
+        pool = rows["paged"]["pool"]
+        results.setdefault("records", []).extend([
+            common.record("serving_layout", shape, "tok_per_s",
+                          rows["dense"]["tps"], config={"layout": "dense"}),
+            common.record("serving_layout", shape, "tok_per_s",
+                          rows["paged"]["tps"], config={"layout": "paged"}),
+            common.record("serving_layout", shape, "paged_dense_tps_ratio",
+                          rows["paged"]["tps"]
+                          / max(rows["dense"]["tps"], 1e-9)),
+            common.record("serving_layout", shape, "concurrency_gain", gain),
+            common.record("serving_layout", shape, "stall_rounds",
+                          pool["stall_rounds"], config={"layout": "paged"}),
+            common.record("serving_layout", shape, "preemptions",
+                          pool["preemptions"], config={"layout": "paged"}),
+        ])
     return gain
 
 
@@ -233,13 +257,11 @@ def run(csv_rows=None, n_requests=96, max_batch=4, rate_hz=1000.0,
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", action="store_true",
-                    help="random-init params (no cached training assets) "
-                         "and a short trace — CI-sized; scheduling and "
-                         "layout behavior are model-quality independent")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write benchmark numbers as JSON")
+    ap = common.make_parser(
+        description=__doc__,
+        smoke_help="random-init params (no cached training assets) and a "
+                   "short trace — CI-sized; scheduling and layout behavior "
+                   "are model-quality independent")
     ap.add_argument("--cache-layout", default="both",
                     choices=["dense", "paged", "both"],
                     help="'dense' skips the layout face-off; 'paged'/'both' "
@@ -263,14 +285,11 @@ def main(argv=None):
         n_requests = args.requests or 96
 
     results = {"smoke": args.smoke, "n_requests": n_requests,
-               "sampled_frac": args.sampled_frac}
+               "sampled_frac": args.sampled_frac, "records": []}
     run(results=results, params=params, n_requests=n_requests,
         layouts=args.cache_layout in ("paged", "both"),
         budget_pages=args.budget_pages, sampled_frac=args.sampled_frac)
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(results, f, indent=2, sort_keys=True)
-        print(f"wrote {args.json}")
+    common.write_results(args.json, results)
 
 
 if __name__ == "__main__":

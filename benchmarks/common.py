@@ -1,8 +1,20 @@
-"""Shared benchmark assets: one tiny teacher + CDLM student trained once and
-cached under experiments/bench_assets/, reused by every table benchmark."""
+"""Shared benchmark assets and CLI plumbing.
+
+Assets: one tiny teacher + CDLM student trained once and cached under
+experiments/bench_assets/, reused by every table benchmark.
+
+CLI: every benchmark entry point builds its parser with
+:func:`make_parser` (the shared ``--smoke``/``--json`` surface) and writes
+its numbers with :func:`write_results`; cross-benchmark comparisons (the
+per-PR trajectory in ``benchmarks.trajectory``) consume the shared
+result-record schema produced by :func:`record` —
+``{op, shape, backend, metric, value, config}``.
+"""
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
 import os
 import sys
 import time
@@ -23,6 +35,46 @@ from repro.training import trainer
 
 ASSETS = os.path.join(os.path.dirname(__file__), "..", "experiments",
                       "bench_assets")
+
+
+# ---------------------------------------------------------------------------
+# shared CLI + result-record schema
+# ---------------------------------------------------------------------------
+def make_parser(description=None,
+                smoke_help="CI-sized shapes/traces (random-init params "
+                           "where applicable)"):
+    """The argparse surface every benchmark shares: ``--smoke`` and an
+    explicit ``--json PATH`` (benchmarks never write artifacts to implicit
+    locations — stray ``BENCH_*.json`` at the repo root are gitignored)."""
+    ap = argparse.ArgumentParser(
+        description=description,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--smoke", action="store_true", help=smoke_help)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write benchmark numbers as JSON to PATH")
+    return ap
+
+
+def record(op, shape, metric, value, *, backend=None, config=None):
+    """One schema'd result record — the unit ``benchmarks.trajectory``
+    tracks across PRs. ``shape``/``config`` are plain dicts; ``backend``
+    defaults to the active jax backend."""
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    return {"op": str(op), "shape": dict(shape or {}),
+            "backend": str(backend), "metric": str(metric),
+            "value": float(value), "config": dict(config or {})}
+
+
+def write_results(path, results):
+    """Write a benchmark's ``--json`` artifact (stable key order)."""
+    if not path:
+        return
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
 
 CFG = get_config("qwen2-0.5b").reduced(
     n_layers=2, d_model=128, d_ff=256, vocab_size=128, mask_token_id=127)

@@ -1,0 +1,220 @@
+"""Per-PR benchmark trajectory: schema'd run records in a JSONL ratchet.
+
+Every CI bench run appends one line to ``BENCH_trajectory.jsonl``:
+
+    {"schema": 1, "ts": ..., "sha": ..., "backend": ..., "smoke": ...,
+     "metrics": {<tracked name>: <float>, ...},
+     "records": [{op, shape, backend, metric, value, config}, ...]}
+
+``metrics`` are the *tracked* scalars the regression gate compares —
+ratios and counts chosen to be stable across machines (absolute
+microseconds are not comparable between CI hosts and are carried only in
+``records`` for inspection). The gate (``python -m benchmarks.trajectory
+gate``) compares a candidate run against the last recorded line and fails
+on a regression beyond each metric's tolerance: relative (default 10%)
+for ratio metrics, absolute slack for counts.
+
+    # build a candidate from bench --json artifacts and gate it
+    python -m benchmarks.trajectory gate \
+        --kernels BENCH_kernels.json --serving BENCH_serving.json
+    # record it (CI appends only after the gate passes)
+    python -m benchmarks.trajectory append \
+        --kernels BENCH_kernels.json --serving BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+SCHEMA_VERSION = 1
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_trajectory.jsonl")
+
+# The ratchet: direction says which way is good; rel_tol is the allowed
+# fractional regression vs the last recorded run (the >10% CI gate),
+# abs_tol an absolute slack for small counts. Tolerances are per-metric
+# because smoke-scale traces are noisier for some ratios than others.
+TRACKED: Dict[str, Dict[str, Any]] = {
+    # fused-select speedup over the dense (T, V) selection baseline, per
+    # vocab bucket — the headline kernel number (>= 1.0 means fused wins)
+    "select_speedup_V32768": {"direction": "higher", "rel_tol": 0.10},
+    "select_speedup_V131072": {"direction": "higher", "rel_tol": 0.10},
+    # continuous vs static scheduling throughput on the Poisson trace
+    # (host-pacing sensitive at smoke scale -> wider tolerance)
+    "continuous_static_speedup": {"direction": "higher", "rel_tol": 0.25},
+    # paged vs dense engine throughput at the same KV byte budget (the
+    # noisiest smoke ratio: a 10-request trace on a shared CI host)
+    "paged_dense_tps_ratio": {"direction": "higher", "rel_tol": 0.50},
+    # peak concurrent lanes per byte — structural, near-deterministic
+    "paged_concurrency_gain": {"direction": "higher", "rel_tol": 0.10},
+    # paged scheduling quality: boundaries where a live lane sat
+    # page-starved (count; absolute slack, not a ratio)
+    "paged_stall_rounds": {"direction": "lower", "abs_tol": 2.0},
+}
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def metrics_from(kernels: Optional[dict], serving: Optional[dict]
+                 ) -> Tuple[Dict[str, float], List[dict]]:
+    """Extract (tracked metrics, shared-schema records) from the two bench
+    ``--json`` artifacts. Either may be None — the gate skips metrics that
+    are absent on one side of the comparison."""
+    metrics: Dict[str, float] = {}
+    records: List[dict] = []
+    if kernels:
+        for bucket, row in (kernels.get("select") or {}).items():
+            if "speedup" in row:
+                metrics[f"select_speedup_{bucket}"] = float(row["speedup"])
+        records.extend(kernels.get("records") or [])
+    if serving:
+        sched = serving.get("schedulers") or {}
+        if "speedup" in sched:
+            metrics["continuous_static_speedup"] = float(sched["speedup"])
+        lay = serving.get("layouts") or {}
+        if "paged" in lay and "dense" in lay:
+            dtps = float(lay["dense"].get("tps") or 0.0)
+            if dtps > 0:
+                metrics["paged_dense_tps_ratio"] = \
+                    float(lay["paged"]["tps"]) / dtps
+            pool = lay["paged"].get("pool") or {}
+            if "stall_rounds" in pool:
+                metrics["paged_stall_rounds"] = float(pool["stall_rounds"])
+        if "concurrency_gain" in lay:
+            metrics["paged_concurrency_gain"] = float(lay["concurrency_gain"])
+        records.extend(serving.get("records") or [])
+    return metrics, records
+
+
+def build_run(kernels_path: Optional[str], serving_path: Optional[str]
+              ) -> dict:
+    """One trajectory line from the bench artifacts on disk."""
+    def _load(p):
+        if not p:
+            return None
+        with open(p) as f:
+            return json.load(f)
+
+    kernels, serving = _load(kernels_path), _load(serving_path)
+    metrics, records = metrics_from(kernels, serving)
+    smoke = bool((kernels or {}).get("smoke") or (serving or {}).get("smoke"))
+    backend = next((r["backend"] for r in records if r.get("backend")),
+                   "unknown")
+    return {"schema": SCHEMA_VERSION,
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "sha": _git_sha(), "backend": backend, "smoke": smoke,
+            "metrics": metrics, "records": records}
+
+
+def load_runs(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    runs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                runs.append(json.loads(line))
+    return runs
+
+
+def append_run(path: str, run: dict) -> None:
+    with open(path, "a") as f:
+        f.write(json.dumps(run, sort_keys=True) + "\n")
+
+
+def gate(candidate: dict, previous: Optional[dict],
+         tracked: Optional[Dict[str, Dict[str, Any]]] = None) -> List[str]:
+    """Regression failures of ``candidate`` vs ``previous`` (the last
+    recorded run). No previous run, or a metric missing on either side,
+    is a clean pass for that metric — the ratchet only tightens once a
+    number has been recorded."""
+    if previous is None:
+        return []
+    tracked = TRACKED if tracked is None else tracked
+    fails = []
+    prev_m = previous.get("metrics") or {}
+    cand_m = candidate.get("metrics") or {}
+    for name, spec in tracked.items():
+        if name not in prev_m or name not in cand_m:
+            continue
+        prev, cand = float(prev_m[name]), float(cand_m[name])
+        higher = spec.get("direction", "higher") == "higher"
+        if "abs_tol" in spec:
+            limit = prev - spec["abs_tol"] if higher else prev + spec["abs_tol"]
+            bad = cand < limit if higher else cand > limit
+        else:
+            tol = spec.get("rel_tol", 0.10)
+            limit = prev * (1 - tol) if higher else prev * (1 + tol)
+            bad = cand < limit if higher else cand > limit
+        if bad:
+            fails.append(
+                f"{name}: {cand:.4g} vs last {prev:.4g} "
+                f"(limit {'>=' if higher else '<='} {limit:.4g})")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name in ("append", "gate", "show"):
+        sp = sub.add_parser(name)
+        sp.add_argument("--trajectory", default=DEFAULT_PATH, metavar="PATH")
+        if name != "show":
+            sp.add_argument("--kernels", default=None, metavar="JSON")
+            sp.add_argument("--serving", default=None, metavar="JSON")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "show":
+        for run in load_runs(args.trajectory):
+            m = ", ".join(f"{k}={v:.3g}"
+                          for k, v in sorted(run["metrics"].items()))
+            print(f"{run['ts']} {run['sha']:>9} smoke={run['smoke']} {m}")
+        return 0
+
+    if not args.kernels and not args.serving:
+        ap.error(f"{args.cmd} needs --kernels and/or --serving artifacts")
+    run = build_run(args.kernels, args.serving)
+
+    if args.cmd == "append":
+        append_run(args.trajectory, run)
+        print(f"appended run {run['sha']} "
+              f"({len(run['metrics'])} tracked metrics, "
+              f"{len(run['records'])} records) -> {args.trajectory}")
+        return 0
+
+    runs = load_runs(args.trajectory)
+    previous = runs[-1] if runs else None
+    fails = gate(run, previous)
+    if fails:
+        print("bench trajectory REGRESSION vs last recorded run:")
+        for f in fails:
+            print(f"  {f}")
+        return 1
+    compared = (sorted(set(run['metrics']) & set(TRACKED)
+                       & set((previous or {}).get('metrics', {})))
+                if previous else [])
+    print("bench trajectory gate: OK "
+          f"({len(compared)} metrics vs {previous['sha'] if previous else '—'}"
+          f"{': ' + ', '.join(compared) if compared else ' (first run)'})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

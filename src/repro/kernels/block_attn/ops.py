@@ -8,6 +8,10 @@ padded queries are discarded and padded keys get NEG_INF through the
 ``kv_len`` argument) and flattens batch×heads. GQA KV heads are *not*
 expanded — the kernel indexes KV head ``h // G`` for query head ``h`` in
 its BlockSpec index map, so no G-fold KV copy is materialized in HBM.
+
+Tuning: ``block_q``/``block_k``/``interpret`` resolve through one
+``config=KernelConfig`` (see :mod:`repro.kernels.tuning`); the per-knob
+kwargs remain as deprecated pass-throughs that win over config fields.
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.block_attn.block_attn import block_attention
 
 
@@ -33,13 +38,15 @@ def _pad_to(x, axis, mult):
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "prompt_len", "block_size", "window", "scale",
-                     "softcap", "block_q", "block_k", "interpret"))
+                     "softcap", "block_q", "block_k", "interpret", "config"))
 def flash_block_attention(q, k, v, *, mode: str = "block_causal",
                           prompt_len: int = 0, block_size: int = 1,
                           window: Optional[int] = None, scale: float = 1.0,
-                          softcap: Optional[float] = None, block_q: int = 128,
-                          block_k: int = 128,
-                          interpret: Optional[bool] = None):
+                          softcap: Optional[float] = None,
+                          block_q: Optional[int] = None,
+                          block_k: Optional[int] = None,
+                          interpret: Optional[bool] = None,
+                          config: Optional[tuning.KernelConfig] = None):
     """q: (b, L, Kv, G, hd); k/v: (b, L, Kv, hd) -> (b, L, Kv, G, hd) fp32.
 
     Self-attention over a full sequence (training / prefill). Padding rows
@@ -49,6 +56,12 @@ def flash_block_attention(q, k, v, *, mode: str = "block_causal",
     padded keys to a never-visible trailing CDLM block.
     """
     b, L, Kv, G, hd = q.shape
+    cfg = tuning.resolve(
+        "block_attn",
+        config=tuning.merge_legacy(config, block_q=block_q, block_k=block_k,
+                                   interpret=interpret),
+        L=L)
+    block_q, block_k, interpret = cfg.block_q, cfg.block_k, cfg.interpret
     # pad sequence to tile grid
     qp, _ = _pad_to(q, 1, block_q)
     kp, _ = _pad_to(k, 1, block_k)

@@ -3,7 +3,14 @@ cache ⊕ in-block bidirectional part, combined by online-softmax merge.
 
 ``decode_attention`` reads a dense per-lane cache; ``paged_decode_attention``
 reads a block-paged pool through per-lane page tables (and takes *per-lane*
-cache lengths, since paged decode serves lanes at mixed block offsets)."""
+cache lengths, since paged decode serves lanes at mixed block offsets).
+
+Tuning: both ops take ``config=KernelConfig`` (see
+:mod:`repro.kernels.tuning`). For the dense kernel ``block_k`` is the cache
+tile; the paged kernel's page tile and lane grid are fixed by the pool's
+``page_size`` and page-table shape (chosen by the serving engine), so only
+``interpret`` resolves from the table there. The legacy ``block_k``/
+``interpret`` kwargs stay as deprecated pass-throughs."""
 from __future__ import annotations
 
 import functools
@@ -12,6 +19,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.decode_attn.decode_attn import (
     NEG_INF,
     decode_attention_partial,
@@ -53,11 +61,14 @@ def _block_partial(q, k_blk, v_blk, *, scale, softcap, window, g):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "softcap", "window", "block_k", "interpret"))
+    static_argnames=("scale", "softcap", "window", "block_k", "interpret",
+                     "config"))
 def decode_attention(q, k_cache, v_cache, k_blk, v_blk, cache_len, *,
                      scale: float = 1.0, softcap: Optional[float] = None,
-                     window: Optional[int] = None, block_k: int = 128,
-                     interpret: Optional[bool] = None):
+                     window: Optional[int] = None,
+                     block_k: Optional[int] = None,
+                     interpret: Optional[bool] = None,
+                     config: Optional[tuning.KernelConfig] = None):
     """Model-layout decode attention.
 
     q: (b, Bq, Kv, G, hd); k/v_cache: (b, S, Kv, hd); k/v_blk: (b, Bq, Kv, hd);
@@ -65,6 +76,17 @@ def decode_attention(q, k_cache, v_cache, k_blk, v_blk, cache_len, *,
     """
     b, Bq, Kv, G, hd = q.shape
     S = k_cache.shape[1]
+    cfg = tuning.resolve(
+        "decode_attn",
+        config=tuning.merge_legacy(config, block_k=block_k,
+                                   interpret=interpret),
+        S=S)
+    block_k, interpret = cfg.block_k, cfg.interpret
+    if S % block_k != 0:
+        # the kernel requires S to tile exactly; fall back to the largest
+        # dividing tile so tuned configs never break odd cache lengths
+        while S % block_k != 0:
+            block_k //= 2
     qf = q.transpose(0, 2, 1, 3, 4).reshape(b * Kv, Bq * G, hd)
     kcf = k_cache.transpose(0, 2, 1, 3).reshape(b * Kv, S, hd)
     vcf = v_cache.transpose(0, 2, 1, 3).reshape(b * Kv, S, hd)
@@ -82,12 +104,13 @@ def decode_attention(q, k_cache, v_cache, k_blk, v_blk, cache_len, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "softcap", "window", "interpret"))
+    static_argnames=("scale", "softcap", "window", "interpret", "config"))
 def paged_decode_attention(q, k_pages, v_pages, k_blk, v_blk, page_table,
                            cache_lens, *, scale: float = 1.0,
                            softcap: Optional[float] = None,
                            window: Optional[int] = None,
-                           interpret: Optional[bool] = None):
+                           interpret: Optional[bool] = None,
+                           config: Optional[tuning.KernelConfig] = None):
     """Model-layout decode attention over a block-paged KV pool.
 
     q: (b, Bq, Kv, G, hd); k/v_pages: (n_pages, page, Kv, hd) pools shared
@@ -96,6 +119,11 @@ def paged_decode_attention(q, k_pages, v_pages, k_blk, v_blk, page_table,
     or (b,) int32 — per-lane valid cache prefix. Returns (b, Bq, Kv, G, hd).
     """
     b, Bq, Kv, G, hd = q.shape
+    cfg = tuning.resolve(
+        "decode_attn",
+        config=tuning.merge_legacy(config, interpret=interpret),
+        S=page_table.shape[1] * k_pages.shape[1])
+    interpret = cfg.interpret
     qf = q.transpose(0, 2, 1, 3, 4).reshape(b, Kv, Bq * G, hd)
     kp = k_pages.transpose(2, 0, 1, 3)        # (Kv, n_pages, page, hd)
     vp = v_pages.transpose(2, 0, 1, 3)

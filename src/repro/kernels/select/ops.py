@@ -16,6 +16,12 @@ unembedding matrix ``(d, V)`` to ``(candidate ids, confidences)`` of shape
 Both implementations share first-occurrence argmax tie-breaking with
 ``jnp.argmax`` and emit confidences equal to the dense
 softmax-probability-of-argmax up to fp32 reduction order.
+
+Tuning: all knobs live on one :class:`repro.kernels.tuning.KernelConfig`
+consumed via ``config=``; the per-knob kwargs (``block_t``/``block_v``/
+``impl``/``interpret``) are deprecated pass-throughs that override config
+fields when passed. With neither given, the knobs resolve from the tuned
+table per ``(vocab bucket, backend)`` — see ``repro.kernels.tuning``.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.select.ref import select_streaming
 from repro.kernels.select.select import select_forward
 
@@ -42,10 +49,13 @@ def _pad_axis(x, axis, mult):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("softcap", "block_t", "block_v", "impl", "interpret"))
+    static_argnames=("softcap", "block_t", "block_v", "impl", "interpret",
+                     "config"))
 def fused_select(hidden, w, masked, *, softcap: Optional[float] = None,
-                 block_t: int = 128, block_v: int = 512, impl: str = "auto",
-                 interpret: Optional[bool] = None):
+                 block_t: Optional[int] = None,
+                 block_v: Optional[int] = None, impl: Optional[str] = None,
+                 interpret: Optional[bool] = None,
+                 config: Optional[tuning.KernelConfig] = None):
     """hidden: (..., d); w: (d, V); masked: (...) bool ->
     (cand (...) int32, conf (...) fp32).
 
@@ -53,9 +63,15 @@ def fused_select(hidden, w, masked, *, softcap: Optional[float] = None,
     softmax probability; rows with ``masked == False`` (already finalized)
     get -inf confidence, matching ``diffusion.confidence_and_candidates``
     at temperature 0."""
-    if impl not in IMPLS:
-        raise ValueError(f"unknown fused_select impl {impl!r} "
+    cfg = tuning.resolve(
+        "select",
+        config=tuning.merge_legacy(config, block_t=block_t, block_v=block_v,
+                                   impl=impl, interpret=interpret),
+        V=w.shape[1])
+    if cfg.impl not in IMPLS:
+        raise ValueError(f"unknown fused_select impl {cfg.impl!r} "
                          f"(expected one of {IMPLS})")
+    impl = cfg.impl
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "streaming"
     lead = hidden.shape[:-1]
@@ -63,15 +79,15 @@ def fused_select(hidden, w, masked, *, softcap: Optional[float] = None,
     m2 = masked.reshape(-1)
     if impl == "streaming":
         cand, conf = select_streaming(h2, w, m2, softcap=softcap,
-                                      chunk=block_v)
+                                      chunk=cfg.chunk or cfg.block_v)
     else:
         T = h2.shape[0]
         V = w.shape[1]
-        hp = _pad_axis(h2, 0, block_t)
-        mp = _pad_axis(m2.astype(jnp.int32), 0, block_t)
-        wp = _pad_axis(w, 1, block_v)
+        hp = _pad_axis(h2, 0, cfg.block_t)
+        mp = _pad_axis(m2.astype(jnp.int32), 0, cfg.block_t)
+        wp = _pad_axis(w, 1, cfg.block_v)
         cand, conf = select_forward(hp, wp, mp, v_total=V, softcap=softcap,
-                                    block_t=block_t, block_v=block_v,
-                                    interpret=interpret)
+                                    block_t=cfg.block_t, block_v=cfg.block_v,
+                                    interpret=cfg.interpret)
         cand, conf = cand[:T], conf[:T]
     return cand.reshape(lead), conf.reshape(lead)

@@ -1,0 +1,451 @@
+"""Kernel autotuning: one :class:`KernelConfig` across every kernel op,
+plus a persisted registry of swept-best configs per
+``(op, shape-bucket, backend)``.
+
+The four kernel packages used to expose their tile/grid knobs as scattered
+per-op kwargs (``block_t``/``block_v`` on select and xent, ``block_k`` on
+decode_attn, ``block_q``/``block_k`` on block_attn, the streaming-fallback
+vocab ``chunk``, plus ``impl``/``interpret``). :class:`KernelConfig` is the
+union of those knobs as a single frozen (hashable, jit-static) dataclass
+consumed by every op's ``config=`` parameter; the legacy kwargs keep working
+as deprecated pass-throughs and take precedence when given explicitly.
+
+When a caller passes *neither* an explicit kwarg nor a config field, the op
+resolves the knob from the **tuned-config table**
+(``src/repro/kernels/tuned_configs.json``, checked in): best configs found
+by :func:`run_sweep` (driven by ``benchmarks/bench_kernels.py --tune``),
+keyed by op name, a coarse power-of-two shape bucket, and the jax backend.
+Unknown ``(op, bucket, backend)`` combinations fall back cleanly to the
+op's built-in defaults, so the table is an accelerator, never a
+correctness dependency.
+
+Resolution precedence (per knob):
+
+  explicit legacy kwarg  >  ``config=`` field  >  tuned table  >  built-in
+
+Sweeps time the *jit-compiled* path of each op on the current backend: on
+CPU that is the streaming/scan fallbacks (select's vocab-chunked scan,
+xent's chunked backward) — timing the interpreted Pallas kernels would
+measure the interpreter, so Pallas tile sweeps only run on compiled
+backends (TPU/GPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+TABLE_PATH = os.path.join(os.path.dirname(__file__), "tuned_configs.json")
+
+OPS = ("select", "xent", "decode_attn", "block_attn")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """The union of every kernel op's tuning knobs.
+
+    ``None`` fields mean "not specified": resolution falls through to the
+    tuned table, then the op's built-in default. Frozen (hashable) so a
+    config can ride through ``jax.jit`` as a static argument.
+
+    - ``block_t``  — row tile: decode rows (select) / tokens (xent);
+    - ``block_v``  — vocab tile of the Pallas select/xent kernels;
+    - ``block_q``  — query tile (block_attn);
+    - ``block_k``  — key tile (block_attn) / cache tile (decode_attn);
+    - ``chunk``    — vocab chunk of the jit'd streaming fallbacks
+                     (select's scan impl, xent's chunked backward);
+    - ``impl``     — select implementation ("auto" | "pallas" | "streaming");
+    - ``interpret``— force Pallas interpret mode (None = backend default).
+    """
+    block_t: Optional[int] = None
+    block_v: Optional[int] = None
+    block_q: Optional[int] = None
+    block_k: Optional[int] = None
+    chunk: Optional[int] = None
+    impl: Optional[str] = None
+    interpret: Optional[bool] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "KernelConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        if unknown:
+            raise ValueError(f"unknown KernelConfig fields {sorted(unknown)}")
+        return cls(**d)
+
+
+#: Built-in defaults per op — the historical kwarg defaults, so an empty
+#: or unknown table reproduces pre-tuning behavior exactly.
+OP_DEFAULTS: Dict[str, KernelConfig] = {
+    "select": KernelConfig(block_t=128, block_v=512, impl="auto"),
+    "xent": KernelConfig(block_t=128, block_v=512),
+    "decode_attn": KernelConfig(block_k=128),
+    "block_attn": KernelConfig(block_q=128, block_k=128),
+}
+
+
+def pow2_bucket(n: int) -> int:
+    """Round ``n`` up to the next power of two (the bucket granularity)."""
+    if n <= 1:
+        return 1
+    return 1 << (int(n) - 1).bit_length()
+
+
+def bucket_for(op: str, **shape) -> str:
+    """Coarse shape-bucket label per op.
+
+    select/xent bucket on the vocab (``V``) — the axis the kernels tile and
+    the one that dominates cost; decode_attn on the cache length (``S``);
+    block_attn on the sequence length (``L``). Buckets are next-pow2, so
+    V=32_768 and V=131_072 land in distinct buckets while e.g. 50k-ish
+    tokenizer vocabs share one.
+    """
+    if op in ("select", "xent"):
+        return f"V{pow2_bucket(shape['V'])}"
+    if op == "decode_attn":
+        return f"S{pow2_bucket(shape['S'])}"
+    if op == "block_attn":
+        return f"L{pow2_bucket(shape['L'])}"
+    raise ValueError(f"unknown op {op!r} (expected one of {OPS})")
+
+
+def backend() -> str:
+    return jax.default_backend()
+
+
+# ---------------------------------------------------------------------------
+# Registry (load / lookup / resolve / save)
+# ---------------------------------------------------------------------------
+_TABLE_CACHE: Dict[str, Dict[Tuple[str, str, str], Dict[str, Any]]] = {}
+
+
+def _load(path: Optional[str] = None) -> Dict[Tuple[str, str, str],
+                                              Dict[str, Any]]:
+    path = path or TABLE_PATH
+    if path in _TABLE_CACHE:
+        return _TABLE_CACHE[path]
+    entries: Dict[Tuple[str, str, str], Dict[str, Any]] = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+        for e in data.get("entries", []):
+            entries[(e["op"], e["bucket"], e["backend"])] = e
+    _TABLE_CACHE[path] = entries
+    return entries
+
+
+def clear_cache() -> None:
+    """Drop the in-process table cache (tests / after re-sweeping)."""
+    _TABLE_CACHE.clear()
+
+
+def lookup(op: str, bucket: str, *, backend_name: Optional[str] = None,
+           path: Optional[str] = None) -> Optional[KernelConfig]:
+    """Best known config for ``(op, bucket, backend)``; ``None`` when the
+    table has no entry (callers then use built-in defaults)."""
+    entry = _load(path).get((op, bucket, backend_name or backend()))
+    if entry is None:
+        return None
+    return KernelConfig.from_dict(entry["config"])
+
+
+def resolve(op: str, *, config: Optional[KernelConfig] = None,
+            table_path: Optional[str] = None, **shape) -> KernelConfig:
+    """Fully-resolved config for one op call.
+
+    ``config`` fields that are set win over the tuned table; the table wins
+    over :data:`OP_DEFAULTS`; every knob ends up non-None iff the op's
+    default sets it. Explicit legacy kwargs are merged by the op *before*
+    calling this (they are folded into ``config``).
+    """
+    if op not in OP_DEFAULTS:
+        raise ValueError(f"unknown op {op!r} (expected one of {OPS})")
+    layers = [OP_DEFAULTS[op]]
+    tuned = lookup(op, bucket_for(op, **shape), path=table_path)
+    if tuned is not None:
+        layers.append(tuned)
+    if config is not None:
+        layers.append(config)
+    merged: Dict[str, Any] = {}
+    for layer in layers:
+        for k, v in layer.to_dict().items():
+            merged[k] = v
+    return KernelConfig(**merged)
+
+
+def merge_legacy(config: Optional[KernelConfig],
+                 **legacy) -> Optional[KernelConfig]:
+    """Fold explicitly-passed legacy kwargs (non-None values) over
+    ``config`` — the deprecated pass-through path. Returns ``None`` when
+    nothing was specified at all (pure table/default resolution)."""
+    explicit = {k: v for k, v in legacy.items() if v is not None}
+    if not explicit:
+        return config
+    base = config.to_dict() if config is not None else {}
+    base.update(explicit)
+    return KernelConfig(**base)
+
+
+def save_table(entries: List[Dict[str, Any]],
+               path: Optional[str] = None) -> str:
+    """Write a sweep's best-config entries, replacing same-key rows of any
+    existing table (other backends' rows are preserved)."""
+    path = path or TABLE_PATH
+    merged = dict(_load(path)) if os.path.exists(path) else {}
+    _TABLE_CACHE.pop(path, None)
+    for e in entries:
+        merged[(e["op"], e["bucket"], e["backend"])] = e
+    rows = sorted(merged.values(),
+                  key=lambda e: (e["op"], e["bucket"], e["backend"]))
+    with open(path, "w") as f:
+        json.dump({"version": 1, "entries": rows}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Sweeps
+# ---------------------------------------------------------------------------
+def _time_us(fn, *args, iters: int = 5, repeats: int = 3) -> float:
+    """Best-of-``repeats`` average over ``iters`` calls. Min-of-windows
+    rejects OS scheduler noise a single average folds in — without it a
+    loaded host can invert sweep rankings."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def _entry(op: str, bucket: str, cfg: KernelConfig, us: float,
+           baseline_us: float, shape: Dict[str, int]) -> Dict[str, Any]:
+    return {"op": op, "bucket": bucket, "backend": backend(),
+            "config": cfg.to_dict(), "metric": "us_per_call",
+            "value": round(us, 1), "baseline_us": round(baseline_us, 1),
+            "shape": shape}
+
+
+def select_candidates() -> List[KernelConfig]:
+    """Sweep space for the fused-select op on the current backend."""
+    if backend() == "tpu":
+        return [KernelConfig(impl="pallas", block_t=bt, block_v=bv)
+                for bt in (64, 128, 256) for bv in (512, 1024, 2048)]
+    # CPU/GPU fast path is the jit'd vocab-chunked streaming scan
+    return [KernelConfig(impl="streaming", chunk=c)
+            for c in (512, 1024, 2048, 4096, 8192, 16384)]
+
+
+def sweep_select(*, T: int = 32, d: int = 128,
+                 vocabs: Tuple[int, ...] = (32_768, 131_072),
+                 iters: int = 3, verbose: bool = True) -> List[Dict[str, Any]]:
+    """Per-vocab-bucket sweep of the fused-select op vs its dense baseline.
+
+    Times the jit-compiled path (streaming scan on CPU/GPU, the Pallas
+    kernel on TPU) at decode-step shapes; returns registry entries for the
+    best config per bucket.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.select import fused_select, select_ref
+
+    key = jax.random.PRNGKey(0)
+    entries = []
+    for V in vocabs:
+        ks = jax.random.split(key, 3)
+        h = jax.random.normal(ks[0], (T, d), jnp.float32) * 0.5
+        w = jax.random.normal(ks[1], (d, V), jnp.float32) * 0.1
+        m = jax.random.bernoulli(ks[2], 0.7, (T,))
+        base = jax.jit(select_ref, static_argnames=("softcap",))
+        tb = _time_us(base, h, w, m, iters=iters)
+        best: Tuple[float, Optional[KernelConfig]] = (float("inf"), None)
+        for cfg in select_candidates():
+            fn = jax.jit(lambda h, w, m, cfg=cfg: fused_select(
+                h, w, m, config=cfg))
+            tf = _time_us(fn, h, w, m, iters=iters)
+            if verbose:
+                print(f"  select V={V} {cfg.to_dict()}: {tf:9.0f}us "
+                      f"({tb / tf:.2f}x baseline)")
+            if tf < best[0]:
+                best = (tf, cfg)
+        bucket = bucket_for("select", V=V)
+        entries.append(_entry("select", bucket, best[1], best[0], tb,
+                              {"T": T, "d": d, "V": V}))
+        if verbose:
+            print(f"  select {bucket}: best {best[1].to_dict()} "
+                  f"{best[0]:9.0f}us ({tb / best[0]:.2f}x baseline)")
+    return entries
+
+
+def sweep_xent(*, T: int = 64, d: int = 128,
+               vocabs: Tuple[int, ...] = (32_768,), iters: int = 3,
+               verbose: bool = True) -> List[Dict[str, Any]]:
+    """Sweep the fused-xent backward's vocab chunk (the jit'd scan path —
+    CPU-timeable) or, on TPU, the forward kernel's tiles."""
+    import jax.numpy as jnp
+
+    from repro.kernels.xent import fused_xent
+
+    key = jax.random.PRNGKey(1)
+    entries = []
+    on_tpu = backend() == "tpu"
+    for V in vocabs:
+        ks = jax.random.split(key, 3)
+        h = jax.random.normal(ks[0], (T, d), jnp.float32) * 0.5
+        w = jax.random.normal(ks[1], (d, V), jnp.float32) * 0.1
+        y = jax.random.randint(ks[2], (T,), 0, V)
+        if on_tpu:
+            cands = [KernelConfig(block_t=bt, block_v=bv)
+                     for bt in (64, 128, 256) for bv in (512, 1024, 2048)]
+
+            def run(cfg):
+                return jax.jit(lambda h, w, y, cfg=cfg: fused_xent(
+                    h, w, y, config=cfg))
+        else:
+            cands = [KernelConfig(chunk=c)
+                     for c in (512, 1024, 2048, 4096, 8192)]
+
+            def run(cfg):
+                # the backward is the jit'd scan whose chunk we tune; the
+                # interpreted forward is excluded from both sides equally
+                # by timing grad-of-sum through the same forward config
+                return jax.jit(jax.grad(
+                    lambda h, w, y, cfg=cfg: fused_xent(
+                        h, w, y, config=cfg).sum(), argnums=(0, 1)),
+                    static_argnames=())
+        baseline_cfg = cands[0]
+        tb = _time_us(run(baseline_cfg), h, w, y, iters=iters)
+        best: Tuple[float, Optional[KernelConfig]] = (tb, baseline_cfg)
+        for cfg in cands[1:]:
+            tf = _time_us(run(cfg), h, w, y, iters=iters)
+            if verbose:
+                print(f"  xent V={V} {cfg.to_dict()}: {tf:9.0f}us")
+            if tf < best[0]:
+                best = (tf, cfg)
+        bucket = bucket_for("xent", V=V)
+        entries.append(_entry("xent", bucket, best[1], best[0], tb,
+                              {"T": T, "d": d, "V": V}))
+        if verbose:
+            print(f"  xent {bucket}: best {best[1].to_dict()} "
+                  f"{best[0]:9.0f}us")
+    return entries
+
+
+def sweep_decode_attn(*, b: int = 4, Bq: int = 8, Kv: int = 2, hd: int = 64,
+                      S: int = 1024, iters: int = 3,
+                      verbose: bool = True) -> List[Dict[str, Any]]:
+    """Cache-tile (``block_k``) sweep of the dense decode-attention kernel.
+    Compiled backends only — the interpreted kernel's timing reflects the
+    Pallas interpreter, not HBM behavior."""
+    if backend() not in ("tpu", "gpu"):
+        if verbose:
+            print("  decode_attn: skipped (Pallas kernel is interpreted on "
+                  f"{backend()}; tile timings would measure the interpreter)")
+        return []
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attn import decode_attention
+
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, Bq, Kv, 2, hd))
+    kc = jax.random.normal(ks[1], (b, S, Kv, hd))
+    vc = jax.random.normal(ks[2], (b, S, Kv, hd))
+    kb = jax.random.normal(ks[3], (b, Bq, Kv, hd))
+    vb = jax.random.normal(ks[4], (b, Bq, Kv, hd))
+    clen = jnp.asarray(S, jnp.int32)
+    entries = []
+    best: Tuple[float, Optional[KernelConfig]] = (float("inf"), None)
+    tb = None
+    for bk in (64, 128, 256, 512):
+        if S % bk:
+            continue
+        cfg = KernelConfig(block_k=bk)
+        fn = jax.jit(lambda q, kc, vc, kb, vb, c, cfg=cfg: decode_attention(
+            q, kc, vc, kb, vb, c, scale=0.125, config=cfg))
+        tf = _time_us(fn, q, kc, vc, kb, vb, clen, iters=iters)
+        tb = tf if tb is None else tb
+        if verbose:
+            print(f"  decode_attn S={S} block_k={bk}: {tf:9.0f}us")
+        if tf < best[0]:
+            best = (tf, cfg)
+    entries.append(_entry("decode_attn", bucket_for("decode_attn", S=S),
+                          best[1], best[0], tb,
+                          {"b": b, "Bq": Bq, "Kv": Kv, "hd": hd, "S": S}))
+    return entries
+
+
+def sweep_block_attn(*, b: int = 1, L: int = 1024, Kv: int = 2, G: int = 2,
+                     hd: int = 64, iters: int = 3,
+                     verbose: bool = True) -> List[Dict[str, Any]]:
+    """Tile sweep (``block_q``/``block_k``) of the block-causal flash
+    kernel. Compiled backends only (see :func:`sweep_decode_attn`)."""
+    if backend() not in ("tpu", "gpu"):
+        if verbose:
+            print("  block_attn: skipped (Pallas kernel is interpreted on "
+                  f"{backend()})")
+        return []
+    import jax.numpy as jnp  # noqa: F401
+
+    from repro.kernels.block_attn import flash_block_attention
+
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, L, Kv, G, hd))
+    k = jax.random.normal(ks[1], (b, L, Kv, hd))
+    v = jax.random.normal(ks[2], (b, L, Kv, hd))
+    entries = []
+    best: Tuple[float, Optional[KernelConfig]] = (float("inf"), None)
+    tb = None
+    for bq in (128, 256):
+        for bk in (128, 256, 512):
+            cfg = KernelConfig(block_q=bq, block_k=bk)
+            fn = jax.jit(lambda q, k, v, cfg=cfg: flash_block_attention(
+                q, k, v, mode="block_causal", prompt_len=64, block_size=32,
+                scale=0.125, config=cfg))
+            tf = _time_us(fn, q, k, v, iters=iters)
+            tb = tf if tb is None else tb
+            if verbose:
+                print(f"  block_attn L={L} bq={bq} bk={bk}: {tf:9.0f}us")
+            if tf < best[0]:
+                best = (tf, cfg)
+    entries.append(_entry("block_attn", bucket_for("block_attn", L=L),
+                          best[1], best[0], tb,
+                          {"b": b, "L": L, "Kv": Kv, "G": G, "hd": hd}))
+    return entries
+
+
+def run_sweep(ops: Optional[Tuple[str, ...]] = None, *,
+              vocabs: Tuple[int, ...] = (32_768, 131_072),
+              iters: int = 3, out_path: Optional[str] = None,
+              verbose: bool = True) -> List[Dict[str, Any]]:
+    """Sweep the requested ops on the current backend and persist the best
+    configs. Default op set: everything timeable on this backend."""
+    ops = ops or OPS
+    entries: List[Dict[str, Any]] = []
+    if "select" in ops:
+        entries += sweep_select(vocabs=vocabs, iters=iters, verbose=verbose)
+    if "xent" in ops:
+        entries += sweep_xent(vocabs=vocabs[:1], iters=iters, verbose=verbose)
+    if "decode_attn" in ops:
+        entries += sweep_decode_attn(iters=iters, verbose=verbose)
+    if "block_attn" in ops:
+        entries += sweep_block_attn(iters=iters, verbose=verbose)
+    if entries:
+        path = save_table(entries, out_path)
+        if verbose:
+            print(f"wrote {len(entries)} tuned configs -> {path}")
+    return entries

@@ -4,14 +4,23 @@ Forward: the Pallas streaming kernel (no (T, V) logits in HBM). Backward:
 the same vocab-tiled schedule expressed as a ``lax.scan`` over vocab chunks
 (dh += (p - 1y) @ Wᵀ, dW += hᵀ (p - 1y)), recomputing each logit tile —
 identical memory behavior, one more matmul pass (the standard
-recompute-softmax trade)."""
+recompute-softmax trade).
+
+Tuning: knobs resolve through :mod:`repro.kernels.tuning` — pass one
+``config=KernelConfig`` (``block_t``/``block_v`` tile the forward kernel,
+``chunk`` sets the backward's scan chunk); the positional ``block_t``/
+``block_v``/``interpret`` args keep working as deprecated pass-throughs.
+Unspecified knobs come from the tuned table per (vocab bucket, backend).
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.xent.xent import xent_forward
 
 
@@ -23,33 +32,48 @@ def _pad_t(x, mult, fill=0):
     return jnp.pad(x, widths, constant_values=fill), x.shape[0]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def fused_xent(hidden, w, targets, block_t=128, block_v=512, interpret=None):
-    """Per-token cross-entropy (T,) without materializing logits."""
-    loss, _ = _fwd(hidden, w, targets, block_t, block_v, interpret)
-    return loss
-
-
-def _fwd(hidden, w, targets, block_t, block_v, interpret):
-    V = w.shape[1]
+def _resolve(V, block_t, block_v, interpret,
+             config: Optional[tuning.KernelConfig]):
+    cfg = tuning.resolve(
+        "xent",
+        config=tuning.merge_legacy(config, block_t=block_t, block_v=block_v,
+                                   interpret=interpret),
+        V=V)
+    block_v = cfg.block_v
     if V % block_v != 0:
         # pick the largest tile that divides V (keeps kernel exact)
         for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
             if V % cand == 0:
                 block_v = cand
                 break
-    hp, T = _pad_t(hidden, block_t)
-    yp, _ = _pad_t(targets, block_t)
-    loss = xent_forward(hp, w, yp, block_t=block_t, block_v=block_v,
-                        interpret=interpret)[:T]
+    return cfg.block_t, block_v, cfg.interpret, cfg.chunk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def fused_xent(hidden, w, targets, block_t: Optional[int] = None,
+               block_v: Optional[int] = None, interpret=None,
+               config: Optional[tuning.KernelConfig] = None):
+    """Per-token cross-entropy (T,) without materializing logits."""
+    loss, _ = _fwd(hidden, w, targets, block_t, block_v, interpret, config)
+    return loss
+
+
+def _fwd(hidden, w, targets, block_t, block_v, interpret, config):
+    bt, bv, interp, _ = _resolve(w.shape[1], block_t, block_v, interpret,
+                                 config)
+    hp, T = _pad_t(hidden, bt)
+    yp, _ = _pad_t(targets, bt)
+    loss = xent_forward(hp, w, yp, block_t=bt, block_v=bv,
+                        interpret=interp)[:T]
     return loss, (hidden, w, targets)
 
 
-def _bwd(block_t, block_v, interpret, res, g):
+def _bwd(block_t, block_v, interpret, config, res, g):
     hidden, w, targets = res
     T, d = hidden.shape
     V = w.shape[1]
-    chunk = max(block_v, 512)
+    _, bv, _, tuned_chunk = _resolve(V, block_t, block_v, interpret, config)
+    chunk = tuned_chunk if tuned_chunk else max(bv, 512)
     while V % chunk != 0:
         chunk //= 2
     n = V // chunk

@@ -64,6 +64,19 @@ The continuous engine runs over either KV layout
   canvases is what buys higher concurrency per HBM byte at mixed
   generation lengths.
 
+  Paged scheduling is *sync-free and overlapped*: because the device
+  allocator (:func:`repro.core.cache.alloc`) is deterministic — lanes
+  scanned in index order, all-or-nothing per lane, pages handed out
+  lowest-index-first — the host mirrors page accounting exactly (per-lane
+  allocated-slot high-water mark + a free-page counter) and never blocks
+  on device allocation results. Each ``step()`` dispatches
+  in-flight-block alloc → admission → decode → *next-block prefetch*
+  back-to-back; in-flight lanes get pages **before** admissions (a
+  newcomer can't starve a running lane), and the prefetch claims the
+  following block's pages while the current block's results drain, so the
+  next boundary's alloc is a no-op. Page identity never feeds the decode
+  math, so dense and paged decodes stay bit-identical.
+
 Metrics follow the paper (Tables 1–2): per-request latency, TPS (valid
 tokens / wall-clock), refinement steps, generation length. The continuous
 engine reports true per-request latency (arrival → completion, queueing
@@ -730,6 +743,51 @@ class ContinuousEngine(_RequestStepper):
         self._live_samples: List[int] = []
         self._preemptions = 0
         self._stall_rounds = 0
+        # host mirror of the device page allocator (paged layout): per-lane
+        # allocated table-slot high-water mark and the pool's free count.
+        # cache.alloc is deterministic (lane-index order, all-or-nothing,
+        # lowest-index-first pages) and every span this engine allocates is
+        # a contiguous slot prefix, so (hi, free) reproduce its decisions
+        # exactly — step() never reads an allocation result off the device.
+        self._host_hi = np.zeros((self.n_lanes,), np.int64)
+        self._host_blk = np.zeros((self.n_lanes,), np.int64)
+        self._host_free = self.n_pages
+
+    # -- host page-accounting mirror (paged layout) --------------------------
+    def _host_target_hi(self, blk: int) -> int:
+        """Table slots a lane must hold through block ``blk``:
+        ceil(P/B) prompt slots + blk+1 block slots (spans are contiguous
+        slot prefixes, so this is the whole allocation state)."""
+        P, B = self.spec.prompt_len, self.spec.block_size
+        return -(-P // B) + min(int(blk), self.spec.n_blocks - 1) + 1
+
+    def _host_alloc(self, rows: np.ndarray) -> np.ndarray:
+        """Mirror ``cache.alloc`` for ``rows``'s current blocks: lane-index
+        order, all-or-nothing per lane. Returns the per-lane ok mask and
+        commits successful lanes to the mirror."""
+        ok = np.zeros((self.n_lanes,), bool)
+        for i in range(self.n_lanes):
+            if not rows[i]:
+                continue
+            t = self._host_target_hi(self._host_blk[i])
+            need = max(0, t - int(self._host_hi[i]))
+            if need <= self._host_free:
+                self._host_free -= need
+                self._host_hi[i] = max(int(self._host_hi[i]), t)
+                ok[i] = True
+        return ok
+
+    def _host_evict(self, rows: np.ndarray) -> None:
+        """Mirror ``cache.reset``: a lane's pages all return to the pool."""
+        for i in np.flatnonzero(rows):
+            self._host_free += int(self._host_hi[i])
+            self._host_hi[i] = 0
+
+    def page_accounting(self):
+        """(host_free, device_free) — equal by construction; the device
+        read exists for tests/debugging only (it synchronizes)."""
+        dev = int(np.asarray(C.free_page_count(self._state.cache)))
+        return self._host_free, dev
 
     def warmup(self, extras=None, *, per_request: bool = False):
         """Compile the admit/decode/evict paths; ``per_request=True``
@@ -806,6 +864,8 @@ class ContinuousEngine(_RequestStepper):
                 row = np.zeros((self.n_lanes,), bool)
                 row[lane] = True
                 self._state = self._jit_evict(self._state, jnp.asarray(row))
+                if self.paged:
+                    self._host_evict(row)
                 self._flights[lane] = None
                 self._resolved.pop(request_id, None)
                 self._emitted.pop(request_id, None)
@@ -818,76 +878,30 @@ class ContinuousEngine(_RequestStepper):
                    for f in self._flights)
 
     def step(self) -> List[BlockEvent]:
-        """Advance one block boundary: admit arrived requests into free
-        lanes, (paged) back every live lane's next block with pages, run
-        one block-level decode for the runnable lanes, evict finished
-        lanes. Returns one :class:`BlockEvent` per block finalized this
-        step (final blocks carry the request's :class:`GenerationOutput`).
+        """Advance one block boundary: (paged) back the in-flight lanes'
+        current blocks with pages, admit arrived requests into free lanes,
+        run one block-level decode for the runnable lanes, (paged) prefetch
+        the survivors' *next* blocks, evict finished lanes. Returns one
+        :class:`BlockEvent` per block finalized this step (final blocks
+        carry the request's :class:`GenerationOutput`).
+
+        The paged path is dispatch-only up to the decode: the run mask and
+        the admission budget come from the host page mirror, so no device
+        allocation result is ever read back. In-flight lanes allocate
+        before admissions (newcomers can't starve a running lane), and most
+        boundaries find their pages already claimed by the previous step's
+        prefetch.
         """
         N, P, B = self.n_lanes, self.spec.prompt_len, self.spec.block_size
         state = self._state
         now = time.perf_counter() - self._t0
 
-        # ---- admission at the block boundary ----
-        # paged: budgeted by free *pages* for prompt + next block, not by
-        # whole-sequence reservation — a request enters as soon as its
-        # next block can be backed
-        free = [i for i in range(N) if self._flights[i] is None]
-        free_pg = (int(np.asarray(C.free_page_count(state.cache)))
-                   if self.paged and free and self._queue else 0)
-        admit = np.zeros((N,), bool)
-        prompts = np.zeros((N, P), np.int32)
-        nblocks = np.zeros((N,), np.int32)
-        temps = np.zeros((N,), np.float32)
-        taus = np.zeros((N,), np.float32)
-        eos = np.zeros((N,), np.int32)
-        keys = np.zeros((N, 2), np.uint32)
-        for lane in free:
-            if not self._queue or self._queue[0].arrival_s > now:
-                break
-            if self.paged and free_pg < self._admit_pages:
-                break
-            req = self._queue.pop(0)
-            rp = self._resolved[req.id]
-            self._flights[lane] = _Flight(
-                req, rp, admit_t=now,
-                arrival=self._arrival.get(req.id, req.arrival_s))
-            admit[lane] = True
-            prompts[lane] = np.asarray(req.prompt)
-            nblocks[lane] = self._lane_nblocks(rp)
-            temps[lane] = rp.temperature
-            taus[lane] = rp.conf_threshold
-            eos[lane] = rp.eos_token_id
-            keys[lane] = _lane_key(rp)
-            if self.paged:
-                free_pg -= self._admit_pages
-        if admit.any():
-            state, aok = self._jit_admit(
-                self.params, state, jnp.asarray(prompts), jnp.asarray(admit),
-                jnp.asarray(nblocks), jnp.asarray(temps), jnp.asarray(taus),
-                jnp.asarray(eos), jnp.asarray(keys))
-            if self.paged:
-                aok = np.asarray(aok)
-                assert bool(aok[admit].all()), \
-                    "page accounting bug: admitted within budget but " \
-                    "allocation failed"
-        if all(f is None for f in self._flights):
-            # nothing decoding and nothing arrived yet: idle to the next
-            # arrival instead of spinning
-            self._state = state
-            if self._queue:
-                wait = self._queue[0].arrival_s - (time.perf_counter()
-                                                   - self._t0)
-                if wait > 0:
-                    time.sleep(wait)
-            return []
-
-        # ---- paged: back every live lane's current block with pages ----
-        live = np.asarray(state.live)
-        if self.paged:
-            state, ok = self._jit_alloc_block(state)
-            run = live & np.asarray(ok)
-            while live.any() and not run.any():
+        # ---- paged: back the in-flight lanes' current blocks FIRST ----
+        live = np.asarray([f is not None for f in self._flights])
+        run = np.zeros((N,), bool)
+        if self.paged and live.any():
+            run = self._host_alloc(live)
+            while not run.any():
                 # every live lane is page-starved: preempt the youngest
                 # (its pages go back to the pool, its request re-enters
                 # the queue — the request's own deterministic RNG stream
@@ -902,28 +916,85 @@ class ContinuousEngine(_RequestStepper):
                 vrow = np.zeros((N,), bool)
                 vrow[victim] = True
                 state = self._jit_evict(state, jnp.asarray(vrow))
+                self._host_evict(vrow)
                 self._queue.insert(0, self._flights[victim].req)
                 self._flights[victim] = None
                 self._preemptions += 1
-                live = np.asarray(state.live)
-                state, ok = self._jit_alloc_block(state)
-                run = live & np.asarray(ok)
-            if not live.any():
-                self._state = state
-                return []
+                live[victim] = False
+                run = self._host_alloc(live)
+            # one dispatch, no result read: the device allocator's
+            # decisions equal the host plan by construction
+            state, _ = self._jit_alloc_block(state)
             if (live & ~run).any():
                 self._stall_rounds += 1
-            self._pool_samples.append(
-                self.n_pages
-                - int(np.asarray(C.free_page_count(state.cache))))
-        else:
-            run = live
+        elif not self.paged:
+            run = live.copy()
+
+        # ---- admission at the block boundary ----
+        # paged: budgeted by the mirror's free *pages* for prompt + next
+        # block, not by whole-sequence reservation — a request enters as
+        # soon as its next block can be backed
+        free = [i for i in range(N) if self._flights[i] is None]
+        admit = np.zeros((N,), bool)
+        prompts = np.zeros((N, P), np.int32)
+        nblocks = np.zeros((N,), np.int32)
+        temps = np.zeros((N,), np.float32)
+        taus = np.zeros((N,), np.float32)
+        eos = np.zeros((N,), np.int32)
+        keys = np.zeros((N, 2), np.uint32)
+        for lane in free:
+            if not self._queue or self._queue[0].arrival_s > now:
+                break
+            if self.paged and self._host_free < self._admit_pages:
+                break
+            req = self._queue.pop(0)
+            rp = self._resolved[req.id]
+            self._flights[lane] = _Flight(
+                req, rp, admit_t=now,
+                arrival=self._arrival.get(req.id, req.arrival_s))
+            admit[lane] = True
+            prompts[lane] = np.asarray(req.prompt)
+            nblocks[lane] = self._lane_nblocks(rp)
+            temps[lane] = rp.temperature
+            taus[lane] = rp.conf_threshold
+            eos[lane] = rp.eos_token_id
+            keys[lane] = _lane_key(rp)
+            if self.paged:
+                self._host_free -= self._admit_pages
+                self._host_hi[lane] = self._admit_pages
+                self._host_blk[lane] = 0
+        if admit.any():
+            state, _ = self._jit_admit(
+                self.params, state, jnp.asarray(prompts), jnp.asarray(admit),
+                jnp.asarray(nblocks), jnp.asarray(temps), jnp.asarray(taus),
+                jnp.asarray(eos), jnp.asarray(keys))
+            run = run | admit
+        if all(f is None for f in self._flights):
+            # nothing decoding and nothing arrived yet: idle to the next
+            # arrival instead of spinning
+            self._state = state
+            if self._queue:
+                wait = self._queue[0].arrival_s - (time.perf_counter()
+                                                   - self._t0)
+                if wait > 0:
+                    time.sleep(wait)
+            return []
+        if self.paged:
+            self._pool_samples.append(self.n_pages - self._host_free)
 
         # ---- one block-level decode step for the runnable lanes ----
         self._live_samples.append(int(run.sum()))
+        self._host_blk[run] += 1
         state = self._jit_decode_block(self.params, state, jnp.asarray(run),
                                        sampled=self._sampled_step())
+        if self.paged:
+            # prefetch: claim the surviving lanes' next-block pages while
+            # this boundary's results drain — dispatched before any result
+            # is read, so the next step's in-flight alloc is a no-op
+            state, _ = self._jit_alloc_block(state)
         live = np.asarray(state.live)
+        if self.paged:
+            self._host_alloc(live)
         t_done = time.perf_counter() - self._t0
 
         # ---- block events + eviction of finished lanes ----
@@ -981,6 +1052,7 @@ class ContinuousEngine(_RequestStepper):
             drow = np.zeros((N,), bool)
             drow[done_lanes] = True
             state = self._jit_evict(state, jnp.asarray(drow))
+            self._host_evict(drow)
         self._state = state
         return events
 

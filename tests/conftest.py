@@ -14,3 +14,14 @@ import pytest  # noqa: E402
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """XLA's CPU compiler can segfault inside ``backend_compile`` late in a
+    long single-process run (hundreds of accumulated executables on jaxlib
+    0.4.x) — the crash point moves between runs and every module passes in
+    isolation. Dropping compiled-executable caches at module boundaries
+    bounds the accumulation; per-module jit reuse is unaffected."""
+    yield
+    jax.clear_caches()

@@ -1,0 +1,348 @@
+"""Kernel tuned-config registry (repro.kernels.tuning) + bench trajectory.
+
+Covers the PR contracts:
+
+- every entry in the checked-in tuned table produces outputs equivalent to
+  the op's built-in default config *and* its dense reference oracle
+  (candidate ids exact; confidences/losses to fp tolerance — a different
+  vocab chunk changes fp32 reduction order by design);
+- registry lookups fall back cleanly on unknown buckets/backends/ops;
+- resolution precedence: explicit legacy kwarg > config field > tuned
+  table > built-in default;
+- the paged engine's host page-accounting mirror equals the device
+  allocator's free-page count at every block boundary (the sync-free
+  scheduling invariant);
+- the bench trajectory gate passes/fails per tracked-metric tolerance.
+"""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import tuning
+from repro.kernels.select import fused_select, select_ref
+from repro.kernels.xent import fused_xent
+
+# benchmarks.* lives at the repo root, not under src/
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# KernelConfig + registry mechanics
+# ---------------------------------------------------------------------------
+def test_kernel_config_hashable_and_roundtrips():
+    cfg = tuning.KernelConfig(block_t=64, chunk=1024, impl="streaming")
+    assert hash(cfg) == hash(tuning.KernelConfig(**cfg.to_dict()))
+    assert tuning.KernelConfig.from_dict(cfg.to_dict()) == cfg
+    with pytest.raises(ValueError, match="unknown KernelConfig fields"):
+        tuning.KernelConfig.from_dict({"block_z": 1})
+
+
+def test_buckets_are_pow2_and_op_specific():
+    assert tuning.bucket_for("select", V=32_768) == "V32768"
+    assert tuning.bucket_for("select", V=50_000) == "V65536"
+    assert tuning.bucket_for("xent", V=131_072) == "V131072"
+    assert tuning.bucket_for("decode_attn", S=1000) == "S1024"
+    assert tuning.bucket_for("block_attn", L=512) == "L512"
+    with pytest.raises(ValueError, match="unknown op"):
+        tuning.bucket_for("nope", V=1)
+
+
+def test_lookup_falls_back_cleanly(tmp_path):
+    """Unknown buckets/backends/ops resolve to None (lookup) and to the
+    op's built-in defaults (resolve) — the table is never load-bearing."""
+    p = tmp_path / "table.json"
+    p.write_text(json.dumps({"version": 1, "entries": [
+        {"op": "select", "bucket": "V32768", "backend": "cpu",
+         "config": {"impl": "streaming", "chunk": 4096}},
+    ]}))
+    path = str(p)
+    assert tuning.lookup("select", "V32768", backend_name="cpu",
+                         path=path).chunk == 4096
+    assert tuning.lookup("select", "V1024", backend_name="cpu",
+                         path=path) is None          # unknown bucket
+    assert tuning.lookup("select", "V32768", backend_name="tpu",
+                         path=path) is None          # unknown backend
+    assert tuning.lookup("xent", "V32768", backend_name="cpu",
+                         path=path) is None          # op not in table
+    # resolve() on a table miss == the op's built-in defaults
+    missing = tuning.resolve("select", table_path=str(tmp_path / "no.json"),
+                             V=32_768)
+    assert missing == tuning.OP_DEFAULTS["select"]
+    with pytest.raises(ValueError, match="unknown op"):
+        tuning.resolve("nope", V=1)
+
+
+def test_resolution_precedence(tmp_path):
+    p = tmp_path / "table.json"
+    p.write_text(json.dumps({"version": 1, "entries": [
+        {"op": "select", "bucket": tuning.bucket_for("select", V=4096),
+         "backend": tuning.backend(),
+         "config": {"impl": "streaming", "chunk": 2048, "block_t": 32}},
+    ]}))
+    path = str(p)
+    # tuned table beats built-in default
+    cfg = tuning.resolve("select", V=4096, table_path=path)
+    assert (cfg.chunk, cfg.block_t) == (2048, 32)
+    assert cfg.block_v == 512  # untouched knob keeps the built-in default
+    # config field beats table
+    cfg = tuning.resolve("select", V=4096, table_path=path,
+                         config=tuning.KernelConfig(chunk=512))
+    assert cfg.chunk == 512 and cfg.block_t == 32
+    # explicit legacy kwarg beats config field (merge_legacy layering)
+    merged = tuning.merge_legacy(tuning.KernelConfig(chunk=512, block_t=8),
+                                 block_t=16)
+    cfg = tuning.resolve("select", V=4096, table_path=path, config=merged)
+    assert cfg.block_t == 16 and cfg.chunk == 512
+    # merge_legacy with nothing explicit is a pure passthrough
+    assert tuning.merge_legacy(None) is None
+    assert tuning.merge_legacy(None, block_t=None) is None
+
+
+def test_save_table_merges_preserving_other_backends(tmp_path):
+    path = str(tmp_path / "t.json")
+    tuning.save_table([{"op": "select", "bucket": "V1024", "backend": "tpu",
+                        "config": {"block_v": 1024}}], path)
+    tuning.save_table([{"op": "select", "bucket": "V1024", "backend": "cpu",
+                        "config": {"chunk": 512}}], path)
+    assert tuning.lookup("select", "V1024", backend_name="tpu",
+                         path=path).block_v == 1024
+    assert tuning.lookup("select", "V1024", backend_name="cpu",
+                         path=path).chunk == 512
+
+
+# ---------------------------------------------------------------------------
+# Checked-in table entries: tuned config == default config == oracle
+# ---------------------------------------------------------------------------
+def _table_entries():
+    with open(tuning.TABLE_PATH) as f:
+        return json.load(f)["entries"]
+
+
+def test_checked_in_table_is_loadable():
+    entries = _table_entries()
+    assert entries, "tuned_configs.json must ship at least one entry"
+    for e in entries:
+        assert e["op"] in tuning.OP_DEFAULTS
+        tuning.KernelConfig.from_dict(e["config"])  # schema-valid
+
+
+@pytest.mark.parametrize("entry", _table_entries(),
+                         ids=lambda e: f"{e['op']}-{e['bucket']}")
+def test_tuned_config_matches_default_and_oracle(entry):
+    """Every shipped tuned config produces the same results as the op's
+    built-in default config and its dense reference. Candidate ids are
+    bit-identical; probabilities/losses/grads match to fp32 tolerance (a
+    tuned vocab chunk legitimately changes fp32 reduction order). Shapes
+    are CI-trimmed — bucketing/resolution math is shape-independent."""
+    op = entry["op"]
+    cfg = tuning.KernelConfig.from_dict(entry["config"])
+    default = tuning.OP_DEFAULTS[op]
+    key = jax.random.PRNGKey(0)
+    T, d, V = 16, 32, 4096
+    if op == "select":
+        ks = jax.random.split(key, 3)
+        h = jax.random.normal(ks[0], (T, d), jnp.float32) * 0.5
+        w = jax.random.normal(ks[1], (d, V), jnp.float32) * 0.1
+        m = jax.random.bernoulli(ks[2], 0.7, (T,))
+        ct, ft = fused_select(h, w, m, config=cfg)
+        cd, fd = fused_select(h, w, m, config=default)
+        cr, fr = select_ref(h, w, m)
+        np.testing.assert_array_equal(np.asarray(ct), np.asarray(cd))
+        np.testing.assert_array_equal(np.asarray(ct), np.asarray(cr))
+        np.testing.assert_allclose(np.asarray(ft), np.asarray(fd),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ft), np.asarray(fr),
+                                   rtol=1e-5, atol=1e-6)
+    elif op == "xent":
+        ks = jax.random.split(key, 3)
+        h = jax.random.normal(ks[0], (T, d), jnp.float32) * 0.5
+        w = jax.random.normal(ks[1], (d, V), jnp.float32) * 0.1
+        y = jax.random.randint(ks[2], (T,), 0, V)
+        ref = -jax.nn.log_softmax(h.astype(jnp.float32) @ w)[
+            jnp.arange(T), y]
+        lt = fused_xent(h, w, y, config=cfg)
+        ld = fused_xent(h, w, y, config=default)
+        np.testing.assert_allclose(np.asarray(lt), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(lt), np.asarray(ld),
+                                   rtol=1e-5, atol=1e-6)
+        gt = jax.grad(lambda h: fused_xent(h, w, y, config=cfg).sum())(h)
+        gd = jax.grad(
+            lambda h: fused_xent(h, w, y, config=default).sum())(h)
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(gd),
+                                   rtol=1e-4, atol=1e-5)
+    elif op == "decode_attn":
+        from repro.kernels.decode_attn import decode_attention
+        b, Bq, Kv, G, hd, S = 2, 4, 2, 2, 8, 64
+        ks = jax.random.split(key, 5)
+        q = jax.random.normal(ks[0], (b, Bq, Kv, G, hd))
+        kc = jax.random.normal(ks[1], (b, S, Kv, hd))
+        vc = jax.random.normal(ks[2], (b, S, Kv, hd))
+        kb = jax.random.normal(ks[3], (b, Bq, Kv, hd))
+        vb = jax.random.normal(ks[4], (b, Bq, Kv, hd))
+        clen = jnp.asarray(S, jnp.int32)
+        ot = decode_attention(q, kc, vc, kb, vb, clen, scale=0.125,
+                              config=cfg)
+        od = decode_attention(q, kc, vc, kb, vb, clen, scale=0.125,
+                              config=default)
+        np.testing.assert_allclose(np.asarray(ot), np.asarray(od),
+                                   rtol=1e-5, atol=1e-6)
+    else:  # block_attn
+        from repro.kernels.block_attn import flash_block_attention
+        b, L, Kv, G, hd = 1, 64, 2, 2, 8
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, L, Kv, G, hd))
+        k = jax.random.normal(ks[1], (b, L, Kv, hd))
+        v = jax.random.normal(ks[2], (b, L, Kv, hd))
+        ot = flash_block_attention(q, k, v, prompt_len=16, block_size=16,
+                                   scale=0.125, config=cfg)
+        od = flash_block_attention(q, k, v, prompt_len=16, block_size=16,
+                                   scale=0.125, config=default)
+        np.testing.assert_allclose(np.asarray(ot), np.asarray(od),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_legacy_kwargs_still_work_and_win():
+    """Deprecated per-knob kwargs keep working and match the config path."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    h = jax.random.normal(ks[0], (8, 16))
+    w = jax.random.normal(ks[1], (16, 64))
+    m = jax.random.bernoulli(ks[2], 0.7, (8,))
+    cr, fr = select_ref(h, w, m)
+    for kwargs in ({"impl": "streaming"},
+                   {"impl": "pallas", "interpret": True,
+                    "block_t": 8, "block_v": 32}):
+        c, f = fused_select(h, w, m, **kwargs)
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+        np.testing.assert_allclose(np.asarray(f), np.asarray(fr),
+                                   rtol=1e-5, atol=1e-6)
+    # legacy kwarg == the same knob via config=
+    ck, fk = fused_select(h, w, m, impl="streaming", block_v=32)
+    cc, fc = fused_select(
+        h, w, m, config=tuning.KernelConfig(impl="streaming", block_v=32))
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cc))
+    np.testing.assert_array_equal(np.asarray(fk), np.asarray(fc))
+    with pytest.raises(ValueError, match="unknown fused_select impl"):
+        fused_select(h, w, m, impl="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Paged engine: host page-accounting mirror == device allocator
+# ---------------------------------------------------------------------------
+def test_paged_engine_host_mirror_matches_device():
+    """The sync-free scheduler's host mirror must equal the device pool's
+    free-page count at every block boundary — including under stalls and
+    preemptions (tight pool) and mixed max_tokens — and end fully free
+    after the drain."""
+    from repro.configs.base import ServeConfig
+    from repro.configs.registry import get_config
+    from repro.models import init_model
+    from repro.serving import ContinuousEngine, Request
+
+    cfg = get_config("qwen2-0.5b").reduced(
+        n_layers=2, d_model=128, d_ff=256, vocab_size=128,
+        mask_token_id=127)
+    P, G, B = 8, 16, 4
+    T = P + G
+    serve = ServeConfig(max_batch=2, block_size=B, gen_length=G,
+                        sampler="cdlm", conf_threshold=0.5,
+                        scheduler="continuous", cache_layout="paged",
+                        page_pool_pages=T // B + 2)  # tight: forces stalls
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousEngine(params, cfg, serve, prompt_len=P)
+    eng.warmup()
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        eng.add_request(Request(
+            prompt=rng.integers(2, 120, P).astype(np.int32), id=i,
+            max_tokens=B if i % 2 else None))
+    done = 0
+    while eng.has_unfinished():
+        done += sum(ev.finished for ev in eng.step())
+        host_free, dev_free = eng.page_accounting()
+        assert host_free == dev_free, \
+            f"host mirror {host_free} != device {dev_free}"
+    assert done == 5
+    host_free, dev_free = eng.page_accounting()
+    assert host_free == dev_free == eng.n_pages
+
+
+# ---------------------------------------------------------------------------
+# Bench trajectory gate
+# ---------------------------------------------------------------------------
+def _trajectory():
+    from benchmarks import trajectory
+    return trajectory
+
+
+def test_trajectory_gate_passes_within_tolerance():
+    tr = _trajectory()
+    prev = {"metrics": {"select_speedup_V32768": 1.30,
+                        "paged_stall_rounds": 1.0}}
+    cand = {"metrics": {"select_speedup_V32768": 1.20,   # -7.7% < 10%
+                        "paged_stall_rounds": 3.0}}      # +2 == abs slack
+    assert tr.gate(cand, prev) == []
+    assert tr.gate(cand, None) == []                     # first run passes
+    assert tr.gate({"metrics": {}}, prev) == []          # missing metric ok
+
+
+def test_trajectory_gate_fails_beyond_tolerance():
+    tr = _trajectory()
+    prev = {"metrics": {"select_speedup_V32768": 1.30,
+                        "paged_stall_rounds": 1.0}}
+    fails = tr.gate({"metrics": {"select_speedup_V32768": 1.10}}, prev)
+    assert len(fails) == 1 and "select_speedup_V32768" in fails[0]
+    fails = tr.gate({"metrics": {"paged_stall_rounds": 4.0}}, prev)
+    assert len(fails) == 1 and "paged_stall_rounds" in fails[0]
+
+
+def test_trajectory_append_and_gate_roundtrip(tmp_path):
+    tr = _trajectory()
+    path = str(tmp_path / "traj.jsonl")
+    kernels = {"smoke": True,
+               "select": {"V32768": {"speedup": 1.25}},
+               "records": [{"op": "select", "shape": {"V": 32768},
+                            "backend": "cpu", "metric": "speedup_vs_dense",
+                            "value": 1.25, "config": {}}]}
+    serving = {"smoke": True,
+               "schedulers": {"speedup": 0.9},
+               "layouts": {"concurrency_gain": 1.33,
+                           "dense": {"tps": 100.0},
+                           "paged": {"tps": 90.0,
+                                     "pool": {"stall_rounds": 0.0}}}}
+    kp, sp = tmp_path / "k.json", tmp_path / "s.json"
+    kp.write_text(json.dumps(kernels))
+    sp.write_text(json.dumps(serving))
+    run = tr.build_run(str(kp), str(sp))
+    assert run["metrics"]["select_speedup_V32768"] == 1.25
+    assert run["metrics"]["continuous_static_speedup"] == 0.9
+    assert run["metrics"]["paged_dense_tps_ratio"] == pytest.approx(0.9)
+    assert run["metrics"]["paged_stall_rounds"] == 0.0
+    assert run["metrics"]["paged_concurrency_gain"] == 1.33
+    tr.append_run(path, run)
+    runs = tr.load_runs(path)
+    assert len(runs) == 1
+    assert tr.gate(run, runs[-1]) == []      # identical run: clean pass
+    worse = {"metrics": dict(run["metrics"], select_speedup_V32768=1.0)}
+    assert tr.gate(worse, runs[-1])          # >10% drop: fails
+    # CLI surface: gate exits 0 on pass, 1 on regression
+    assert tr.main(["gate", "--trajectory", path,
+                    "--kernels", str(kp), "--serving", str(sp)]) == 0
+    kernels["select"]["V32768"]["speedup"] = 1.0
+    kp.write_text(json.dumps(kernels))
+    assert tr.main(["gate", "--trajectory", path,
+                    "--kernels", str(kp), "--serving", str(sp)]) == 1
+
+
+def test_shared_record_schema():
+    from benchmarks import common
+    r = common.record("select", {"V": 1024}, "us_per_call", 12.5,
+                      backend="cpu", config={"chunk": 512})
+    assert set(r) == {"op", "shape", "backend", "metric", "value", "config"}
+    assert r["value"] == 12.5 and r["shape"] == {"V": 1024}
